@@ -1,0 +1,45 @@
+"""Shared benchmark helpers: compiled microbench loops + CSV emission."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import system as sysm
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.4f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def micro_alloc(kind: str, size: int, nthreads: int, rounds: int = 128,
+                heap: int = 1 << 25, T: int = 16, alloc_free: bool = False):
+    """Fig 14-style microbenchmark: per-thread latency stats (us)."""
+    cfg = sysm.SystemConfig(kind=kind, heap_bytes=heap, num_threads=T)
+    st = sysm.system_init(cfg)
+    sizes = jnp.where(jnp.arange(T) < nthreads, size, 0).astype(jnp.int32)
+    sz = jnp.tile(sizes[None, :], (rounds, 1))
+    if alloc_free:
+        run = jax.jit(lambda s, z: sysm.run_alloc_free_rounds(cfg, s, z))
+        st, infos_a, infos_f = run(st, sz)
+        lat = (np.asarray(infos_a.latency_cyc)
+               + np.asarray(infos_f.latency_cyc))[:, :nthreads]
+        dram = (np.asarray(infos_a.dram_bytes).sum()
+                + np.asarray(infos_f.dram_bytes).sum())
+    else:
+        run = jax.jit(lambda s, z: sysm.run_alloc_rounds(cfg, s, z))
+        st, ptrs, infos = run(st, sz)
+        lat = np.asarray(infos.latency_cyc)[:, :nthreads]
+        dram = np.asarray(infos.dram_bytes).sum()
+    us = lat / cfg.dpu.freq_hz * 1e6
+    return {
+        "mean_us": float(us.mean()),
+        "p95_us": float(np.percentile(us, 95)),
+        "max_us": float(us.max()),
+        "series_us": us.mean(axis=1),
+        "dram_bytes": int(dram),
+    }

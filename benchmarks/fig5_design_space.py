@@ -1,0 +1,21 @@
+"""Fig 5: design-space exploration — avg alloc latency vs #PIM cores for the
+four (metadata placement x executor) strategies; breakdown at 512 cores."""
+from repro.core import design_space as ds
+
+from .common import emit
+
+
+def run():
+    sweep = ds.sweep(n_cores_list=(1, 8, 64, 512))
+    for strat in ds.STRATEGIES:
+        for n, r in sweep[strat].items():
+            emit(f"fig5/{strat}/cores={n}", r["total"],
+                 f"exec={r['exec']:.2f}us;xfer={r['xfer']:.2f}us")
+    # paper's qualitative claims
+    red = sweep["pim_meta_pim_exec"]
+    flat = red[512]["total"] / red[1]["total"]
+    emit("fig5/winner_scaling_512c_vs_1c", red[512]["total"],
+         f"ratio={flat:.2f} (flat=1.0; paper: scalable)")
+    worst = max(sweep[s][512]["total"] for s in ds.STRATEGIES)
+    emit("fig5/worst_vs_winner_at_512", worst,
+         f"{worst / red[512]['total']:.0f}x slower than PIM-meta/PIM-exec")

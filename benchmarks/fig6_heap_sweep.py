@@ -1,0 +1,19 @@
+"""Fig 6: straw-man buddy latency vs (heap size x alloc size) — single thread
+consecutive (de)allocations; normalized to 32KB/2KB."""
+from .common import emit, micro_alloc
+
+
+def run():
+    base = None
+    for heap_log in (15, 20, 25):             # 32 KB, 1 MB, 32 MB
+        for size in (2048, 256, 32):
+            r = micro_alloc("strawman", size, nthreads=1, rounds=64,
+                            heap=1 << heap_log, alloc_free=True)
+            if base is None:
+                base = r["mean_us"]
+            emit(f"fig6/heap={1 << heap_log}/alloc={size}", r["mean_us"],
+                 f"slowdown_vs_32KB_2KB={r['mean_us'] / base:.2f}x")
+    r_big = micro_alloc("strawman", 32, 1, rounds=64, heap=1 << 25,
+                        alloc_free=True)
+    emit("fig6/claim_12x_slowdown", r_big["mean_us"],
+         f"measured={r_big['mean_us'] / base:.1f}x (paper: up to 12x)")

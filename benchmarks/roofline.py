@@ -1,0 +1,129 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), prints the
+three per-device roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO
+ratio, and per-cell one-liners. Markdown table via --markdown.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def n_params(cfg) -> float:
+    """Total (and active for MoE) parameter counts from the config."""
+    import numpy as np
+
+    from repro.models import registry
+    sds = registry.param_sds(cfg)
+    import jax
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(sds))
+    active = total
+    if cfg.is_moe:
+        # replace full expert compute with top-k experts for 'active'
+        moe_per_layer = 3 * cfg.d_model * cfg.expert_d_ff
+        total_moe = cfg.n_layers * cfg.n_experts * moe_per_layer
+        active_moe = cfg.n_layers * cfg.top_k * moe_per_layer
+        active = total - total_moe + active_moe
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str, kind: str) -> float:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    total, active = n_params(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * active * tokens
+
+
+def load_cells(results_dir: str = RESULTS_DIR):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def analyze_cell(r: dict) -> dict:
+    if r["status"] != "ok":
+        return {**r, "note": r.get("reason", r.get("error", ""))[:80]}
+    n = r["devices"]
+    hlo = r["hlo"]
+    # the SPMD HLO is the per-device program: terms are per-device already
+    terms = {
+        "compute_s": hlo["flops_scaled"] / PEAK_FLOPS,
+        "memory_s": hlo["memory_bytes_scaled"] / HBM_BW,
+        "collective_s": hlo["collective_bytes_scaled"] / ICI_BW,
+    }
+    bound = max(terms, key=terms.get)
+    total = max(sum(terms.values()), 1e-30)
+    mf = model_flops(r["arch"], r["shape"], r["kind"])   # global model flops
+    useful = (mf / n) / max(hlo["flops_scaled"], 1.0)
+    # roofline fraction: useful per-device compute time / sum of terms
+    frac = (mf / n / PEAK_FLOPS) / total
+    return {
+        **r, "terms": terms, "bottleneck": bound, "model_flops": mf,
+        "useful_flops_ratio": useful, "roofline_frac": frac,
+    }
+
+
+def run(markdown: bool = False):
+    from .common import emit
+    cells = [analyze_cell(r) for r in load_cells()]
+    ok = [c for c in cells if c["status"] == "ok"]
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        t = c["terms"]
+        emit(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            sum(t.values()) * 1e6,
+            f"compute={t['compute_s']:.2e}s;mem={t['memory_s']:.2e}s;"
+            f"coll={t['collective_s']:.2e}s;bound={c['bottleneck']};"
+            f"useful={c['useful_flops_ratio']:.2f};"
+            f"roofline_frac={c['roofline_frac']:.3f}",
+        )
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    errs = [c for c in cells if c["status"] == "error"]
+    emit("roofline/summary", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};error={len(errs)}")
+
+
+def markdown_table():
+    cells = [analyze_cell(r) for r in load_cells()]
+    rows = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+            " | bound | useful | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | - | - |"
+                        f" - | {c['status']} | - | - |")
+            continue
+        t = c["terms"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} | {c['bottleneck'].replace('_s','')} "
+            f"| {c['useful_flops_ratio']:.2f} | {c['roofline_frac']:.3f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        print(markdown_table())
+    else:
+        run()

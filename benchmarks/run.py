@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [fig5 fig6 ...]
+
+Prints ``name,us_per_call,derived`` CSV rows. `roofline` reads the dry-run
+artifacts (run repro.launch.dryrun first for that section).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+ALL = ("fig5", "fig6", "fig7", "fig14", "fig15", "fig16", "roofline")
+
+
+def main() -> None:
+    which = [a for a in sys.argv[1:] if not a.startswith("-")] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        t0 = time.time()
+        if name == "fig5":
+            from . import fig5_design_space as m
+        elif name == "fig6":
+            from . import fig6_heap_sweep as m
+        elif name == "fig7":
+            from . import fig7_contention as m
+        elif name == "fig14":
+            from . import fig14_micro as m
+        elif name == "fig15":
+            from . import fig15_cache_size as m
+        elif name == "fig16":
+            from . import fig16_graph as m
+        elif name == "roofline":
+            from . import roofline as m
+        else:
+            raise SystemExit(f"unknown benchmark {name}")
+        try:
+            m.run()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

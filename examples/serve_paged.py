@@ -1,0 +1,15 @@
+"""Paged-KV serving with PIM-malloc page management + Pallas paged attention.
+
+    PYTHONPATH=src python examples/serve_paged.py
+
+Thin wrapper over the production driver (launch/serve.py) at smoke scale.
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "granite_3_8b", "--reduced",
+                "--batch", "4", "--prompt-len", "32", "--decode-steps", "48",
+                "--impl", "kernel"]
+    serve.main()

@@ -1,0 +1,24 @@
+"""Assigned architecture configs (public-literature specs) + paper config.
+
+Each module exposes CONFIG: ArchConfig with the exact assigned dimensions;
+`get(name)` resolves by arch id (dashes or underscores).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "mamba2_130m", "nemotron_4_340b", "stablelm_12b", "mistral_large_123b",
+    "granite_3_8b", "recurrentgemma_9b", "whisper_small", "olmoe_1b_7b",
+    "qwen2_moe_a2_7b", "paligemma_3b",
+)
+
+
+def get(name: str):
+    mod = importlib.import_module(
+        f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get(a) for a in ARCHS}

@@ -1,0 +1,24 @@
+"""repro.core — PIM-malloc: the paper's contribution as composable JAX modules.
+
+Layers (bottom-up):
+  buddy        tensorized array-buddy allocator (backend / straw-man)
+  thread cache + hierarchy: pim_malloc (PIM-malloc-SW semantics)
+  buddy_cache  metadata-cache simulators (SW buffer vs HW CAM+LRU)
+  cost_model   DPU cycle model (UPMEM timing)
+  system       composed design points: strawman / sw / hwsw
+  design_space Table 1 / Fig 5 exploration
+  api          Table 2 paper-facing API
+"""
+from . import (api, buddy, buddy_cache, cost_model, design_space, oracle,
+               pim_malloc, system)
+from .api import Allocator, initAllocator
+from .buddy import BuddyConfig, BuddyState
+from .pim_malloc import PimMallocConfig, PimMallocState
+from .system import SystemConfig, SystemState, malloc_round, free_round, system_init
+
+__all__ = [
+    "api", "buddy", "buddy_cache", "cost_model", "design_space", "oracle",
+    "pim_malloc", "system", "Allocator", "initAllocator", "BuddyConfig",
+    "BuddyState", "PimMallocConfig", "PimMallocState", "SystemConfig",
+    "SystemState", "malloc_round", "free_round", "system_init",
+]

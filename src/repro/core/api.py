@@ -1,0 +1,60 @@
+"""Paper-facing API (Table 2): initAllocator / pimMalloc / pimFree.
+
+Thin, stateful-convenience wrapper over the pure-functional core so the
+examples read like the paper's UPMEM programs. For performance-critical /
+distributed use, call the pure functions in `repro.core.pim_malloc` (or the
+batched `repro.core.system`) directly and manage state explicitly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import pim_malloc
+from .pim_malloc import PimMallocConfig, PimMallocState
+
+
+class Allocator:
+    """Per-PIM-core allocator handle (one heap, T hardware threads)."""
+
+    def __init__(self, heap_bytes: int = 32 * 1024 * 1024,
+                 size_classes=(16, 32, 64, 128, 256, 512, 1024, 2048),
+                 num_threads: int = 16, prepopulate: bool = True):
+        self.cfg = PimMallocConfig(
+            heap_bytes=heap_bytes, size_classes=tuple(size_classes),
+            num_threads=num_threads,
+        )
+        self.state: PimMallocState = pim_malloc.init(self.cfg, prepopulate)
+
+    # -- Table 2 API ---------------------------------------------------------
+    def pimMalloc(self, size: int, thread: int = 0) -> int:
+        sizes = jnp.zeros((self.cfg.num_threads,), jnp.int32).at[thread].set(size)
+        active = jnp.zeros((self.cfg.num_threads,), bool).at[thread].set(True)
+        self.state, ptrs, _ = pim_malloc.malloc(self.cfg, self.state, sizes, active)
+        return int(ptrs[thread])
+
+    def pimFree(self, ptr: int, thread: int = 0) -> None:
+        ptrs = jnp.full((self.cfg.num_threads,), -1, jnp.int32).at[thread].set(ptr)
+        self.state, _ = pim_malloc.free(self.cfg, self.state, ptrs)
+
+    # -- batched (one request per hardware thread) ----------------------------
+    def pimMallocBatch(self, sizes) -> jnp.ndarray:
+        sizes = jnp.asarray(sizes, jnp.int32)
+        self.state, ptrs, _ = pim_malloc.malloc(self.cfg, self.state, sizes)
+        return ptrs
+
+    def pimFreeBatch(self, ptrs) -> None:
+        self.state, _ = pim_malloc.free(self.cfg, self.state,
+                                        jnp.asarray(ptrs, jnp.int32))
+
+    def gc(self) -> None:
+        self.state = pim_malloc.gc(self.cfg, self.state)
+
+    @property
+    def stats(self) -> dict:
+        return {k: int(v) for k, v in self.state.stats._asdict().items()}
+
+
+def initAllocator(heap_bytes: int, size_classes=None, **kw) -> Allocator:
+    if size_classes is None:
+        size_classes = (16, 32, 64, 128, 256, 512, 1024, 2048)
+    return Allocator(heap_bytes=heap_bytes, size_classes=size_classes, **kw)

@@ -1,0 +1,234 @@
+"""Tensorized buddy allocator (the paper's backend / straw-man allocator).
+
+The paper manages each PIM core's heap with a binary buddy tree whose nodes
+carry 2-bit state (free / split / full).  For a fixed-shape, branch-free JAX
+implementation we use the standard *array buddy* encoding instead: a
+``longest[]`` array where ``longest[i]`` is the size in bytes of the largest
+free block underneath tree node ``i`` (1-indexed, root = 1).  alloc/free are
+O(depth) with *fixed* trip counts, which makes them `vmap`-able across PIM
+cores and `scan`-able across a request stream.
+
+Every op also emits a fixed-length *trace* of the tree-node indices it
+touched.  The metadata-cache simulators (`buddy_cache.py`) and the DPU cost
+model (`cost_model.py`) consume these traces; they charge 2 bits per node —
+the paper's metadata encoding — so capacity/traffic arithmetic (e.g. Fig 15's
+"64 B buddy cache = 256 nodes") is reproduced exactly even though the
+functional state here is int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INVALID = jnp.int32(-1)
+
+
+def next_pow2(x):
+    """Smallest power of two >= x (exact integer bit-smear)."""
+    x = jnp.maximum(x, 1).astype(jnp.int32) - 1
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    return x + 1
+
+
+def ilog2(x):
+    """log2 of a power-of-two int32 (exact, via popcount)."""
+    return lax.population_count(jnp.asarray(x, jnp.int32) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BuddyConfig:
+    """Static heap geometry. depth = log2(heap/min_block) tree levels below root."""
+
+    heap_bytes: int
+    min_block: int
+
+    def __post_init__(self):
+        assert self.heap_bytes & (self.heap_bytes - 1) == 0, "heap must be pow2"
+        assert self.min_block & (self.min_block - 1) == 0, "min_block must be pow2"
+        assert self.heap_bytes >= self.min_block
+
+    @property
+    def depth(self) -> int:
+        return (self.heap_bytes // self.min_block).bit_length() - 1
+
+    @property
+    def n_leaf(self) -> int:
+        return self.heap_bytes // self.min_block
+
+    @property
+    def n_nodes(self) -> int:  # 1-indexed array size (slot 0 unused)
+        return 2 * self.n_leaf
+
+    @property
+    def trace_len(self) -> int:
+        # descent records root + one node per level; up-walk one per level.
+        return 2 * (self.depth + 1)
+
+    @property
+    def metadata_bytes(self) -> int:
+        """Paper metadata footprint: 2 bits per tree node."""
+        return (2 * self.n_nodes + 7) // 8
+
+
+class BuddyState(NamedTuple):
+    longest: jnp.ndarray  # int32[n_nodes], bytes of largest free block under node
+
+
+class BuddyEvent(NamedTuple):
+    """Per-op record consumed by cache sims + cost model."""
+
+    ok: jnp.ndarray          # bool — op succeeded
+    levels_down: jnp.ndarray  # int32 — descent length (nodes visited - 1)
+    levels_up: jnp.ndarray    # int32 — ancestor updates
+    trace: jnp.ndarray        # int32[trace_len] node indices, -1 padded
+
+
+def init(cfg: BuddyConfig) -> BuddyState:
+    n = cfg.n_nodes
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # depth of node i = floor(log2(i)); longest = heap >> depth. Slot 0 unused.
+    depth = jnp.where(idx > 0, 31 - lax.clz(jnp.maximum(idx, 1)), 0)
+    longest = jnp.where(idx > 0, cfg.heap_bytes >> depth, 0).astype(jnp.int32)
+    return BuddyState(longest=longest)
+
+
+def _round_size(cfg: BuddyConfig, size):
+    return jnp.maximum(next_pow2(size), cfg.min_block)
+
+
+def alloc(cfg: BuddyConfig, st: BuddyState, size):
+    """Allocate `size` bytes. Returns (state, offset, BuddyEvent); offset=-1 on failure.
+
+    size may be a traced scalar. Fixed trip counts: cfg.depth for both the
+    descent and the ancestor re-max walk.
+    """
+    size = _round_size(cfg, size)
+    ok = (size <= cfg.heap_bytes) & (st.longest[1] >= size)
+    longest = st.longest
+
+    trace0 = jnp.full((cfg.trace_len,), INVALID, dtype=jnp.int32)
+    trace0 = trace0.at[0].set(1)  # root visit
+
+    def down(i, carry):
+        node, node_size, trace, nsteps = carry
+        descend = node_size > size
+        left = 2 * node
+        go_left = longest[left] >= size
+        nxt = jnp.where(go_left, left, left + 1)
+        node = jnp.where(descend, nxt, node)
+        trace = trace.at[1 + i].set(jnp.where(descend, node, INVALID))
+        node_size = jnp.where(descend, node_size >> 1, node_size)
+        nsteps = nsteps + jnp.where(descend, 1, 0)
+        return node, node_size, trace, nsteps
+
+    node, node_size, trace, levels_down = lax.fori_loop(
+        0, cfg.depth, down, (jnp.int32(1), jnp.int32(cfg.heap_bytes), trace0, jnp.int32(0))
+    )
+
+    offset = node * node_size - cfg.heap_bytes
+    longest = longest.at[node].set(jnp.where(ok, 0, longest[node]))
+
+    def up(i, carry):
+        longest, n, trace, nsteps = carry
+        parent = n >> 1
+        active = ok & (parent >= 1)
+        p = jnp.maximum(parent, 1)
+        newval = jnp.maximum(longest[2 * p], longest[2 * p + 1])
+        longest = longest.at[p].set(jnp.where(active, newval, longest[p]))
+        trace = trace.at[cfg.depth + 1 + i].set(jnp.where(active, p, INVALID))
+        nsteps = nsteps + jnp.where(active, 1, 0)
+        return longest, jnp.where(active, p, jnp.int32(0)), trace, nsteps
+
+    longest, _, trace, levels_up = lax.fori_loop(
+        0, cfg.depth, up, (longest, node, trace, jnp.int32(0))
+    )
+
+    offset = jnp.where(ok, offset, INVALID)
+    ev = BuddyEvent(ok=ok, levels_down=levels_down, levels_up=levels_up, trace=trace)
+    return BuddyState(longest=longest), offset, ev
+
+
+def free(cfg: BuddyConfig, st: BuddyState, offset, size):
+    """Free a block previously allocated at `offset` with request `size`."""
+    size = _round_size(cfg, size)
+    node = (offset + cfg.heap_bytes) // size
+    valid = (offset >= 0) & (offset < cfg.heap_bytes) & (st.longest[node] == 0)
+
+    longest = st.longest.at[node].set(jnp.where(valid, size, st.longest[node]))
+    trace0 = jnp.full((cfg.trace_len,), INVALID, dtype=jnp.int32)
+    trace0 = trace0.at[0].set(node)
+
+    def up(i, carry):
+        longest, n, nsize, trace, nsteps = carry
+        parent = n >> 1
+        active = valid & (parent >= 1)
+        p = jnp.maximum(parent, 1)
+        psize = nsize << 1
+        l, r = longest[2 * p], longest[2 * p + 1]
+        both_free = (l == nsize) & (r == nsize)
+        newval = jnp.where(both_free, psize, jnp.maximum(l, r))
+        longest = longest.at[p].set(jnp.where(active, newval, longest[p]))
+        trace = trace.at[1 + i].set(jnp.where(active, p, INVALID))
+        nsteps = nsteps + jnp.where(active, 1, 0)
+        return longest, jnp.where(active, p, jnp.int32(0)), psize, trace, nsteps
+
+    longest, _, _, trace, levels_up = lax.fori_loop(
+        0, cfg.depth, up, (longest, node, size, trace0, jnp.int32(0))
+    )
+    ev = BuddyEvent(
+        ok=valid, levels_down=jnp.int32(0), levels_up=levels_up, trace=trace
+    )
+    return BuddyState(longest=longest), ev
+
+
+def alloc_batch(cfg: BuddyConfig, st: BuddyState, sizes):
+    """Serially service a [B] batch of allocs (models the shared-mutex backend)."""
+
+    def step(st, size):
+        st, off, ev = alloc(cfg, st, size)
+        return st, (off, ev)
+
+    st, (offs, evs) = lax.scan(step, st, sizes)
+    return st, offs, evs
+
+
+def free_batch(cfg: BuddyConfig, st: BuddyState, offsets, sizes):
+    def step(st, x):
+        off, size = x
+        st, ev = free(cfg, st, off, size)
+        return st, ev
+
+    st, evs = lax.scan(step, st, (offsets, sizes))
+    return st, evs
+
+
+def free_bytes(cfg: BuddyConfig, st: BuddyState):
+    """Total free bytes = heap - allocated bytes.
+
+    In the ``longest[]`` encoding, allocating node X sets longest[X]=0 but
+    leaves X's descendants *stale* at their full sizes (the subtree was
+    wholly free when X was chosen). Hence X was allocated-as-a-block iff
+    longest[X]==0 and (X is a leaf, or both children read stale-full).
+    An inner node with longest==0 whose children were allocated individually
+    has children with longest==0 (not full), so the test is exact.
+    """
+    n = cfg.n_nodes
+    idx = jnp.arange(n, dtype=jnp.int32)
+    depth = jnp.where(idx > 0, 31 - lax.clz(jnp.maximum(idx, 1)), 0)
+    full = (cfg.heap_bytes >> depth).astype(jnp.int32)
+    is_leaf = depth == cfg.depth
+    lc = jnp.minimum(2 * idx, n - 1)
+    rc = jnp.minimum(2 * idx + 1, n - 1)
+    child_full = (full >> 1).astype(jnp.int32)
+    stale = (st.longest[lc] == child_full) & (st.longest[rc] == child_full)
+    is_blk = (idx > 0) & (st.longest == 0) & (is_leaf | stale)
+    allocated = jnp.sum(jnp.where(is_blk, full, 0))
+    return jnp.int32(cfg.heap_bytes) - allocated

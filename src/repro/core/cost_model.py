@@ -1,0 +1,123 @@
+"""DPU cycle cost model (UPMEM-PIM timing, Table 3 of the paper).
+
+This container has no PIM (or TPU) hardware, so — like the paper's
+uPIMulator-based evaluation — latency numbers come from a cycle model driven
+by the *functional* allocator's event traces. The same events feed the
+metadata-cache simulators (`buddy_cache.py`), whose per-op hit/miss/DRAM
+counts this module converts into cycles and seconds.
+
+Constants are calibrated against published UPMEM characterization
+(350 MHz in-order DPU, WRAM 1-2 cyc, MRAM DMA ~ 250 ns setup + ~2 B/cyc
+streaming, host Xeon ~3.8 GHz with DRAM-latency-bound pointer chasing) and
+validated in `benchmarks/` against the paper's own ratios (66x, 31%, 12x,
+~80x frontend/backend gap, 28x graph update throughput).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DPUCost:
+    freq_hz: float = 350e6
+    # frontend (thread cache)
+    cyc_front_hit: int = 30      # size-class calc + LIFO pop + counters
+    cyc_front_push: int = 26     # free-path push
+    cyc_refill: int = 190        # carve a 4 KB block into sub-blocks (WRAM writes)
+    # backend (buddy)
+    # NOTE: the DPU's revolving 14-stage pipeline gives a *single* tasklet an
+    # effective issue rate of ~1 instr / 11 cycles; ~30-40 instructions of
+    # address arithmetic + 2-bit field extraction per tree level therefore
+    # cost O(40) effective cycles at the modeled operating point.
+    cyc_node: int = 40           # per-level compare/branch/address arithmetic
+    cyc_meta_hit: int = 2        # metadata access served from scratchpad/buddy cache
+    cyc_mutex: int = 44          # mutex acquire/release (WRAM atomic rmw)
+    # MRAM (per-bank DRAM) DMA
+    mram_setup_cyc: int = 88     # ~250 ns engine setup
+    mram_bytes_per_cyc: float = 2.0   # ~700 MB/s per-DPU streaming
+
+
+@dataclasses.dataclass(frozen=True)
+class HostCost:
+    freq_hz: float = 3.8e9
+    threads: int = 16            # pthreads parallelism for host-executed allocs
+    dram_latency_s: float = 80e-9  # random-access latency; buddy traversal over
+    # N cores' metadata (N x 512 KB >> LLC) is latency-bound per node visit
+    cyc_node: int = 8            # OoO core per-level compute overlapped w/ DRAM
+
+
+@dataclasses.dataclass(frozen=True)
+class XferCost:
+    """host <-> PIM transfers (dpu_push_xfer): PrIM-style bandwidth curves."""
+
+    setup_s: float = 20e-6
+    h2p_per_core_gbs: float = 0.33
+    h2p_cap_gbs: float = 6.7
+    p2h_per_core_gbs: float = 0.25
+    p2h_cap_gbs: float = 4.7
+
+    def h2p_s(self, bytes_total: float, n_cores: int) -> float:
+        bw = min(self.h2p_per_core_gbs * n_cores, self.h2p_cap_gbs) * 1e9
+        return self.setup_s + bytes_total / bw
+
+    def p2h_s(self, bytes_total: float, n_cores: int) -> float:
+        bw = min(self.p2h_per_core_gbs * n_cores, self.p2h_cap_gbs) * 1e9
+        return self.setup_s + bytes_total / bw
+
+
+def mram_access_cyc(cost: DPUCost, bytes_moved) -> jnp.ndarray:
+    """Cycles for one DMA moving `bytes_moved` (0 -> 0 cycles)."""
+    b = jnp.asarray(bytes_moved, jnp.float32)
+    return jnp.where(b > 0, cost.mram_setup_cyc + b / cost.mram_bytes_per_cyc, 0.0)
+
+
+def backend_op_cyc(cost: DPUCost, levels_down, levels_up, meta_hits, meta_misses,
+                   dram_bytes, n_dmas=None) -> jnp.ndarray:
+    """Cycles for one buddy-allocator operation (excluding queuing).
+
+    meta accesses: hits cost cyc_meta_hit; misses cost one DMA each. For the
+    coarse SW buffer each miss is one DMA of buf_bytes; for the HW buddy
+    cache each miss is one DMA of 4 B. `dram_bytes` is total traffic;
+    `n_dmas` defaults to `meta_misses` (one DMA per miss).
+    """
+    levels = jnp.asarray(levels_down + levels_up, jnp.float32)
+    if n_dmas is None:
+        n_dmas = meta_misses
+    n_dmas = jnp.asarray(n_dmas, jnp.float32)
+    dma_cyc = n_dmas * cost.mram_setup_cyc + (
+        jnp.asarray(dram_bytes, jnp.float32) / cost.mram_bytes_per_cyc
+    )
+    meta_cyc = jnp.asarray(meta_hits, jnp.float32) * cost.cyc_meta_hit
+    return cost.cyc_mutex + (levels + 1.0) * cost.cyc_node + meta_cyc + dma_cyc
+
+
+def round_latency_cyc(cost: DPUCost, path, backend_pos, backend_cyc):
+    """Per-thread latency for one request round, including mutex busy-wait.
+
+    path: int32[T] (0 hit / 1 refill / 2 bypass / 3 fail / -1 idle)
+    backend_pos: serialization order among backend users (-1 = frontend only)
+    backend_cyc: float32[T] own backend service cycles (0 for frontend hits)
+
+    A backend user at position k busy-waits for the sum of service times of
+    positions < k (the paper's Fig 7 'lock' time).
+    """
+    used_backend = backend_pos >= 0
+    # queue[k] = sum of service cycles of backend users before position k
+    order_key = jnp.where(used_backend, backend_pos, jnp.int32(1 << 30))
+    order = jnp.argsort(order_key)
+    svc_sorted = backend_cyc[order]
+    wait_sorted = jnp.cumsum(svc_sorted) - svc_sorted
+    wait = jnp.zeros_like(backend_cyc).at[order].set(wait_sorted)
+    wait = jnp.where(used_backend, wait, 0.0)
+
+    own = jnp.where(path == 0, cost.cyc_front_hit, 0.0)
+    own = own + jnp.where(path == 1, cost.cyc_front_hit + cost.cyc_refill, 0.0)
+    own = own + backend_cyc
+    lat = own + wait
+    return jnp.where(path >= 0, lat, 0.0)
+
+
+def cyc_to_us(cost: DPUCost, cyc) -> jnp.ndarray:
+    return jnp.asarray(cyc, jnp.float32) / cost.freq_hz * 1e6

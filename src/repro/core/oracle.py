@@ -1,0 +1,217 @@
+"""Plain-Python reference allocators — oracles for property tests.
+
+These mirror the JAX implementations semantically (same placement decisions:
+leftmost-descent buddy, LIFO size-class freelists) so tests can assert exact
+pointer-for-pointer equality, not just invariant preservation.
+"""
+from __future__ import annotations
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length() if x > 1 else 1
+
+
+class PyBuddy:
+    """Array-buddy ('longest') reference, identical placement to core.buddy."""
+
+    def __init__(self, heap_bytes: int, min_block: int):
+        assert heap_bytes & (heap_bytes - 1) == 0
+        assert min_block & (min_block - 1) == 0
+        self.heap = heap_bytes
+        self.min_block = min_block
+        self.n_leaf = heap_bytes // min_block
+        self.longest = [0] * (2 * self.n_leaf)
+        for i in range(1, 2 * self.n_leaf):
+            self.longest[i] = heap_bytes >> (i.bit_length() - 1)
+
+    def _round(self, size: int) -> int:
+        return max(_next_pow2(size), self.min_block)
+
+    def alloc(self, size: int) -> int:
+        size = self._round(size)
+        if size > self.heap or self.longest[1] < size:
+            return -1
+        node, node_size = 1, self.heap
+        while node_size > size:
+            left = 2 * node
+            node = left if self.longest[left] >= size else left + 1
+            node_size >>= 1
+        offset = node * node_size - self.heap
+        self.longest[node] = 0
+        while node > 1:
+            node >>= 1
+            self.longest[node] = max(self.longest[2 * node], self.longest[2 * node + 1])
+        return offset
+
+    def free(self, offset: int, size: int) -> bool:
+        size = self._round(size)
+        node = (offset + self.heap) // size
+        if offset < 0 or offset >= self.heap or self.longest[node] != 0:
+            return False
+        self.longest[node] = size
+        node_size = size
+        while node > 1:
+            node >>= 1
+            node_size <<= 1
+            l, r = self.longest[2 * node], self.longest[2 * node + 1]
+            if l == node_size >> 1 and r == node_size >> 1:
+                self.longest[node] = node_size
+            else:
+                self.longest[node] = max(l, r)
+        return True
+
+    def free_bytes(self) -> int:
+        """heap - allocated bytes; see core.buddy.free_bytes for the stale-
+        descendant subtlety of the longest[] encoding."""
+
+        def allocated(node: int, size: int) -> int:
+            if self.longest[node] == size:
+                return 0
+            if size == self.min_block:
+                return size if self.longest[node] == 0 else 0
+            l, r = 2 * node, 2 * node + 1
+            if (self.longest[node] == 0 and self.longest[l] == size >> 1
+                    and self.longest[r] == size >> 1):
+                return size
+            return allocated(l, size >> 1) + allocated(r, size >> 1)
+
+        return self.heap - allocated(1, self.heap)
+
+
+class PyPimMalloc:
+    """Reference for core.pim_malloc — identical placement decisions."""
+
+    def __init__(self, heap_bytes=1 << 20, num_threads=4,
+                 size_classes=(16, 32, 64, 128, 256, 512, 1024, 2048),
+                 block_bytes=4096, cap=1024, prepopulate=True):
+        self.cfg = dict(heap=heap_bytes, T=num_threads, classes=list(size_classes),
+                        block=block_bytes, cap=cap)
+        self.buddy = PyBuddy(heap_bytes, block_bytes)
+        self.nc = len(size_classes)
+        self.counts = [[0] * self.nc for _ in range(num_threads)]
+        self.stacks = [[[] for _ in range(self.nc)] for _ in range(num_threads)]
+        self.block_cls = {}
+        self.block_free = {}
+        self.big_log2 = {}
+        self.stats = dict(front_hits=0, front_misses=0, bypass=0, fails=0,
+                          frees_small=0, frees_big=0, dropped=0, gc_blocks=0)
+        if prepopulate:
+            for t in range(num_threads):
+                for c in range(self.nc):
+                    off = self.buddy.alloc(block_bytes)
+                    if off < 0:
+                        continue
+                    csize = size_classes[c]
+                    sub = block_bytes // csize
+                    self.stacks[t][c] = [off + i * csize for i in range(sub)]
+                    self.counts[t][c] = sub
+                    b = off // block_bytes
+                    self.block_cls[b] = c
+                    self.block_free[b] = sub
+
+    def _class_of(self, size):
+        classes = self.cfg["classes"]
+        for c, s in enumerate(classes):
+            if size <= s:
+                return c
+        return self.nc - 1
+
+    def malloc(self, sizes, active=None):
+        T, block = self.cfg["T"], self.cfg["block"]
+        classes = self.cfg["classes"]
+        if active is None:
+            active = [True] * T
+        ptrs = [-1] * T
+        paths = [-1] * T
+        # phase A: hits
+        backend = []
+        for t in range(T):
+            if not active[t] or sizes[t] <= 0:
+                continue
+            size = sizes[t]
+            if size <= classes[-1]:
+                c = self._class_of(size)
+                if self.counts[t][c] > 0:
+                    ptr = self.stacks[t][c][self.counts[t][c] - 1]
+                    self.stacks[t][c].pop()
+                    self.counts[t][c] -= 1
+                    self.block_free[ptr // block] -= 1
+                    ptrs[t] = ptr
+                    paths[t] = 0
+                    self.stats["front_hits"] += 1
+                else:
+                    backend.append((t, "refill", c, size))
+            else:
+                backend.append((t, "bypass", None, size))
+        # phase B: serialized in thread order
+        for t, kind, c, size in backend:
+            if kind == "refill":
+                off = self.buddy.alloc(block)
+                self.stats["front_misses"] += 1
+                if off < 0:
+                    self.stats["fails"] += 1
+                    paths[t] = 3
+                    continue
+                csize = classes[c]
+                sub = block // csize
+                self.stacks[t][c] = [off + i * csize for i in range(sub - 1)]
+                self.counts[t][c] = sub - 1
+                b = off // block
+                self.block_cls[b] = c
+                self.block_free[b] = sub - 1
+                ptrs[t] = off + (sub - 1) * csize
+                paths[t] = 1
+            else:
+                asize = max(_next_pow2(size), block)
+                off = self.buddy.alloc(asize)
+                self.stats["bypass"] += 1
+                if off < 0:
+                    self.stats["fails"] += 1
+                    paths[t] = 3
+                    continue
+                self.big_log2[off // block] = asize.bit_length() - 1
+                ptrs[t] = off
+                paths[t] = 2
+        return ptrs, paths
+
+    def free(self, ptrs, active=None):
+        T, block, cap = self.cfg["T"], self.cfg["block"], self.cfg["cap"]
+        if active is None:
+            active = [True] * T
+        for t in range(T):
+            ptr = ptrs[t]
+            if not active[t] or ptr < 0 or ptr >= self.cfg["heap"]:
+                continue
+            b = ptr // block
+            c = self.block_cls.get(b, -1)
+            if c >= 0:
+                if self.counts[t][c] >= cap:
+                    self.stats["dropped"] += 1
+                    continue
+                self.stacks[t][c].append(ptr)
+                self.counts[t][c] += 1
+                self.block_free[b] = self.block_free.get(b, 0) + 1
+                self.stats["frees_small"] += 1
+            elif self.big_log2.get(b, -1) >= 0 and ptr % block == 0:
+                self.buddy.free(ptr, 1 << self.big_log2[b])
+                del self.big_log2[b]
+                self.stats["frees_big"] += 1
+
+    def gc(self, max_gc=8):
+        block = self.cfg["block"]
+        classes = self.cfg["classes"]
+        full = sorted(
+            b for b, c in self.block_cls.items()
+            if c >= 0 and self.block_free.get(b, 0) == block // classes[c]
+        )
+        for b in full[:max_gc]:
+            c = self.block_cls[b]
+            for t in range(self.cfg["T"]):
+                row = self.stacks[t][c]
+                kept = [p for p in row if p // block != b]
+                self.stacks[t][c] = kept
+                self.counts[t][c] = len(kept)
+            self.buddy.free(b * block, block)
+            del self.block_cls[b]
+            del self.block_free[b]
+            self.stats["gc_blocks"] += 1

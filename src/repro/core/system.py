@@ -1,0 +1,290 @@
+"""End-to-end allocator system simulation: the paper's three design points.
+
+  strawman : buddy_alloc_PIM_DRAM — single-level buddy over the whole heap,
+             min block 32 B (20-level tree for 32 MB), shared mutex, coarse
+             SW metadata buffer. (Section 3.2/3.3.)
+  sw       : PIM-malloc-SW — per-thread caches + 13-level buddy backend +
+             coarse SW metadata buffer. (Section 4.1.)
+  hwsw     : PIM-malloc-HW/SW — same frontend/backend, but backend metadata
+             served by the 16-entry LRU hardware buddy cache. (Section 4.2.)
+
+`malloc_round` / `free_round` service one batched request round (one request
+per thread), persist metadata-cache state across rounds, and return
+per-thread latencies from the DPU cost model — including mutex busy-wait for
+backend users (Fig 7). A whole multi-core PIM system is `vmap` over cores of
+these functions (see benchmarks/fig5) and a TPU mesh deployment is
+`shard_map` of that (`repro.launch`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import buddy, buddy_cache, cost_model, pim_malloc
+from .buddy import BuddyConfig, BuddyState, ilog2, next_pow2
+from .buddy_cache import (BuddyCacheConfig, SWBufferConfig, buddy_cache_access,
+                          buddy_cache_init, sw_buffer_access, sw_buffer_init)
+from .cost_model import DPUCost
+from .pim_malloc import INVALID, PimMallocConfig
+
+KINDS = ("strawman", "sw", "hwsw")
+
+
+# --------------------------------------------------------------------------
+# Straw-man allocator: buddy-only over the full heap, min 32 B
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StrawmanConfig:
+    heap_bytes: int = 32 * 1024 * 1024
+    num_threads: int = 16
+    min_block: int = 32
+
+    @property
+    def buddy_cfg(self) -> BuddyConfig:
+        return BuddyConfig(heap_bytes=self.heap_bytes, min_block=self.min_block)
+
+
+class StrawmanState(NamedTuple):
+    buddy: BuddyState
+    leaf_log2: jnp.ndarray  # int8[n_leaf] alloc size exponent at base leaf, -1
+
+
+def strawman_init(cfg: StrawmanConfig) -> StrawmanState:
+    return StrawmanState(
+        buddy=buddy.init(cfg.buddy_cfg),
+        leaf_log2=jnp.full((cfg.buddy_cfg.n_leaf,), -1, jnp.int8),
+    )
+
+
+def strawman_malloc(cfg: StrawmanConfig, st: StrawmanState, sizes, active=None):
+    T = cfg.num_threads
+    if active is None:
+        active = jnp.ones((T,), bool)
+    active = active & (sizes > 0)
+    tlen = cfg.buddy_cfg.trace_len
+
+    def step(carry, x):
+        bstate, leaf_log2, border = carry
+        need, size = x
+        bstate2, off, bev = buddy.alloc(cfg.buddy_cfg, bstate, size)
+        ok = need & (off >= 0)
+        bstate = BuddyState(longest=jnp.where(need, bstate2.longest, bstate.longest))
+        leaf = jnp.where(ok, off // cfg.min_block, 0)
+        lg = ilog2(next_pow2(jnp.maximum(size, cfg.min_block)))
+        leaf_log2 = leaf_log2.at[leaf].set(
+            jnp.where(ok, lg.astype(jnp.int8), leaf_log2[leaf])
+        )
+        ptr = jnp.where(ok, off, INVALID)
+        bpos = jnp.where(need, border, INVALID)
+        border = border + need.astype(jnp.int32)
+        ev = (
+            jnp.where(need, bev.levels_down, 0),
+            jnp.where(need, bev.levels_up, 0),
+            jnp.where(need, bev.trace, jnp.full((tlen,), INVALID, jnp.int32)),
+            bpos, ok,
+        )
+        return (bstate, leaf_log2, border), (ptr, ev)
+
+    carry = (st.buddy, st.leaf_log2, jnp.int32(0))
+    carry, (ptrs, (lv_down, lv_up, trace, bpos, ok)) = lax.scan(
+        step, carry, (active, sizes)
+    )
+    bstate, leaf_log2, _ = carry
+    path = jnp.where(active & ok, 2, jnp.where(active, 3, INVALID)).astype(jnp.int32)
+    ev = pim_malloc.MallocEvent(path=path, backend_pos=bpos, levels_down=lv_down,
+                                levels_up=lv_up, trace=trace)
+    return StrawmanState(buddy=bstate, leaf_log2=leaf_log2), ptrs, ev
+
+
+def strawman_free(cfg: StrawmanConfig, st: StrawmanState, ptrs, active=None):
+    T = cfg.num_threads
+    if active is None:
+        active = jnp.ones((T,), bool)
+    active = active & (ptrs >= 0) & (ptrs < cfg.heap_bytes)
+    tlen = cfg.buddy_cfg.trace_len
+
+    def step(carry, x):
+        bstate, leaf_log2, border = carry
+        need, ptr = x
+        leaf = jnp.where(need, ptr // cfg.min_block, 0)
+        lg = leaf_log2[leaf].astype(jnp.int32)
+        need = need & (lg >= 0)
+        size = jnp.int32(1) << jnp.maximum(lg, 0)
+        bstate2, bev = buddy.free(cfg.buddy_cfg, bstate, ptr, size)
+        bstate = BuddyState(longest=jnp.where(need, bstate2.longest, bstate.longest))
+        leaf_log2 = leaf_log2.at[leaf].set(
+            jnp.where(need, jnp.int8(-1), leaf_log2[leaf])
+        )
+        bpos = jnp.where(need, border, INVALID)
+        border = border + need.astype(jnp.int32)
+        ev = (
+            jnp.where(need, bev.levels_up, 0),
+            jnp.where(need, bev.trace, jnp.full((tlen,), INVALID, jnp.int32)),
+            bpos,
+        )
+        return (bstate, leaf_log2, border), ev
+
+    carry = (st.buddy, st.leaf_log2, jnp.int32(0))
+    carry, (lv_up, trace, bpos) = lax.scan(step, carry, (active, ptrs))
+    bstate, leaf_log2, _ = carry
+    path = jnp.where(bpos >= 0, 1, INVALID).astype(jnp.int32)
+    ev = pim_malloc.FreeEvent(path=path, backend_pos=bpos, levels_up=lv_up,
+                              trace=trace)
+    return StrawmanState(buddy=bstate, leaf_log2=leaf_log2), ev
+
+
+# --------------------------------------------------------------------------
+# Composite simulator
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    kind: str = "sw"
+    heap_bytes: int = 32 * 1024 * 1024
+    num_threads: int = 16
+    pm: PimMallocConfig = None
+    straw: StrawmanConfig = None
+    sw_buf: SWBufferConfig = SWBufferConfig()
+    bc: BuddyCacheConfig = BuddyCacheConfig()
+    dpu: DPUCost = DPUCost()
+
+    def __post_init__(self):
+        assert self.kind in KINDS
+        if self.pm is None:
+            object.__setattr__(self, "pm", PimMallocConfig(
+                heap_bytes=self.heap_bytes, num_threads=self.num_threads))
+        if self.straw is None:
+            object.__setattr__(self, "straw", StrawmanConfig(
+                heap_bytes=self.heap_bytes, num_threads=self.num_threads))
+
+    @property
+    def trace_len(self) -> int:
+        cfg = self.straw.buddy_cfg if self.kind == "strawman" else self.pm.buddy_cfg
+        return cfg.trace_len
+
+    @property
+    def access_fn(self):
+        if self.kind == "hwsw":
+            return functools.partial(buddy_cache_access, self.bc)
+        return functools.partial(sw_buffer_access, self.sw_buf)
+
+    def cache_init(self):
+        if self.kind == "hwsw":
+            return buddy_cache_init(self.bc)
+        return sw_buffer_init(self.sw_buf)
+
+    @property
+    def dma_bytes_per_miss(self) -> int:
+        return buddy_cache.WORD_BYTES if self.kind == "hwsw" else self.sw_buf.line_bytes
+
+
+class SystemState(NamedTuple):
+    alloc: object            # PimMallocState | StrawmanState
+    cache: object            # BuddyCacheState | SWBufferState
+
+
+class RoundInfo(NamedTuple):
+    latency_cyc: jnp.ndarray   # float32[T]
+    path: jnp.ndarray          # int32[T]
+    meta_hits: jnp.ndarray     # int32[T]
+    meta_misses: jnp.ndarray   # int32[T]
+    dram_bytes: jnp.ndarray    # int32[T]
+    backend_cyc: jnp.ndarray   # float32[T] service time excl. queuing
+
+
+def system_init(cfg: SystemConfig, prepopulate: bool = True) -> SystemState:
+    if cfg.kind == "strawman":
+        alloc = strawman_init(cfg.straw)
+    else:
+        alloc = pim_malloc.init(cfg.pm, prepopulate=prepopulate)
+    return SystemState(alloc=alloc, cache=cfg.cache_init())
+
+
+def _cache_pass(cfg: SystemConfig, cache_st, backend_pos, traces):
+    """Run the metadata cache over this round's backend ops in mutex order."""
+    T = traces.shape[0]
+    key = jnp.where(backend_pos >= 0, backend_pos, jnp.int32(1 << 30))
+    order = jnp.argsort(key)
+    traces_sorted = traces[order]
+    cache_st, stats = buddy_cache.simulate_traces(cfg.access_fn, cache_st,
+                                                  traces_sorted)
+    inv = jnp.zeros((T,), jnp.int32).at[order].set(jnp.arange(T, dtype=jnp.int32))
+    return cache_st, buddy_cache.TraceStats(
+        hits=stats.hits[inv], misses=stats.misses[inv],
+        dram_bytes=stats.dram_bytes[inv],
+    )
+
+
+def malloc_round(cfg: SystemConfig, st: SystemState, sizes, active=None):
+    """One batched round: sizes int32[T]. Returns (state, ptrs, RoundInfo)."""
+    if cfg.kind == "strawman":
+        alloc_st, ptrs, ev = strawman_malloc(cfg.straw, st.alloc, sizes, active)
+    else:
+        alloc_st, ptrs, ev = pim_malloc.malloc(cfg.pm, st.alloc, sizes, active)
+
+    cache_st, tstats = _cache_pass(cfg, st.cache, ev.backend_pos, ev.trace)
+    backend_cyc = cost_model.backend_op_cyc(
+        cfg.dpu, ev.levels_down, ev.levels_up, tstats.hits, tstats.misses,
+        tstats.dram_bytes,
+    )
+    backend_cyc = jnp.where(ev.backend_pos >= 0, backend_cyc, 0.0)
+    lat = cost_model.round_latency_cyc(cfg.dpu, ev.path, ev.backend_pos, backend_cyc)
+    info = RoundInfo(latency_cyc=lat, path=ev.path, meta_hits=tstats.hits,
+                     meta_misses=tstats.misses, dram_bytes=tstats.dram_bytes,
+                     backend_cyc=backend_cyc)
+    return SystemState(alloc=alloc_st, cache=cache_st), ptrs, info
+
+
+def free_round(cfg: SystemConfig, st: SystemState, ptrs, active=None):
+    if cfg.kind == "strawman":
+        alloc_st, ev = strawman_free(cfg.straw, st.alloc, ptrs, active)
+        path = jnp.where(ev.backend_pos >= 0, 1, INVALID)
+    else:
+        alloc_st, ev = pim_malloc.free(cfg.pm, st.alloc, ptrs, active)
+        path = ev.path
+    cache_st, tstats = _cache_pass(cfg, st.cache, ev.backend_pos, ev.trace)
+    backend_cyc = cost_model.backend_op_cyc(
+        cfg.dpu, jnp.zeros_like(ev.levels_up), ev.levels_up, tstats.hits,
+        tstats.misses, tstats.dram_bytes,
+    )
+    backend_cyc = jnp.where(ev.backend_pos >= 0, backend_cyc, 0.0)
+    # frees: small -> push cost; big -> backend cost (+ queue)
+    lat_path = jnp.where(path == 0, 0, jnp.where(path >= 1, 1, INVALID))
+    own = jnp.where(path == 0, cfg.dpu.cyc_front_push, 0.0) + backend_cyc
+    key = jnp.where(ev.backend_pos >= 0, ev.backend_pos, jnp.int32(1 << 30))
+    order = jnp.argsort(key)
+    svc = backend_cyc[order]
+    wait_sorted = jnp.cumsum(svc) - svc
+    wait = jnp.zeros_like(backend_cyc).at[order].set(wait_sorted)
+    wait = jnp.where(ev.backend_pos >= 0, wait, 0.0)
+    lat = jnp.where(path >= 0, own + wait, 0.0)
+    info = RoundInfo(latency_cyc=lat, path=path, meta_hits=tstats.hits,
+                     meta_misses=tstats.misses, dram_bytes=tstats.dram_bytes,
+                     backend_cyc=backend_cyc)
+    return SystemState(alloc=alloc_st, cache=cache_st), info
+
+
+def run_alloc_rounds(cfg: SystemConfig, st: SystemState, sizes_rounds):
+    """scan over [R, T] request rounds; returns (state, ptrs [R,T], infos [R,...])."""
+
+    def step(st, sizes):
+        st, ptrs, info = malloc_round(cfg, st, sizes)
+        return st, (ptrs, info)
+
+    st, (ptrs, infos) = lax.scan(step, st, sizes_rounds)
+    return st, ptrs, infos
+
+
+def run_alloc_free_rounds(cfg: SystemConfig, st: SystemState, sizes_rounds):
+    """Each round: alloc then immediately free (Fig 6's (de)allocation loop)."""
+
+    def step(st, sizes):
+        st, ptrs, info_a = malloc_round(cfg, st, sizes)
+        st, info_f = free_round(cfg, st, ptrs)
+        return st, (info_a, info_f)
+
+    st, (infos_a, infos_f) = lax.scan(step, st, sizes_rounds)
+    return st, infos_a, infos_f

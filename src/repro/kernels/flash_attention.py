@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash attention (forward), causal/sliding-window GQA.
+
+This is the kernel-level fix identified by EXPERIMENTS.md SSPerf IT-A4: the
+pure-JAX chunked flash (layers.flash_attention) keeps its online-softmax
+accumulators as scan carries, which round-trip HBM every block; here they
+live in VMEM scratch across the sequentially-iterated KV-block grid dim, so
+the only HBM traffic is the q/k/v tiles themselves — the S^2 score matrix
+never exists anywhere.
+
+Grid: (batch, kv_head, q_blocks, kv_blocks) with the KV-block axis
+innermost (sequential on TPU). Blocks:
+    q   [1, 1, G, bq, hd]   (GQA group of the kv head)
+    k/v [1, 1, bkv, hd]
+    out [1, 1, G, bq, hd]
+Scratch: m/l [G, bq, 1] and acc [G, bq, hd] fp32 in VMEM.
+
+Validated in interpret mode against layers.attention (tests/test_kernels.py
+sweep: causal x window x dtypes x GQA/MQA/MHA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bkv: int, nk: int, scale: float, causal: bool,
+            window: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # [G, bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)      # [bkv, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # s: [G, bq, bkv]
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (1, bq, 1), 1)
+    kpos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bkv), 2)
+    mask = jnp.ones(s.shape, bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)          # [G, bq, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_new = acc_prev * alpha + jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_kv: int = 512,
+                           interpret: bool = False):
+    """q [B,S,H,hd]; k, v [B,T,KVH,hd] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    assert H % KVH == 0
+    G = H // KVH
+
+    def _fit(n, b):
+        b = min(n, b)
+        while n % b:
+            b -= 1
+        return b
+
+    bq, bkv = _fit(S, block_q), _fit(T, block_kv)
+    nq, nk = S // bq, T // bkv
+    scale = 1.0 / (hd ** 0.5)
+
+    q5 = jnp.moveaxis(q.reshape(B, S, KVH, G, hd), 1, 3)   # [B,KVH,G,S,hd]
+    k4 = jnp.moveaxis(k, 1, 2)                             # [B,KVH,T,hd]
+    v4 = jnp.moveaxis(v, 1, 2)
+
+    kern = functools.partial(_kernel, bq=bq, bkv=bkv, nk=nk, scale=scale,
+                             causal=causal, window=window)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, KVH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd),
+                               lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, bq, 1), jnp.float32),    # m
+            pltpu.VMEM((G, bq, 1), jnp.float32),    # l
+            pltpu.VMEM((G, bq, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q5, k4, v4)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, H, hd)

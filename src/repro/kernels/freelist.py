@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: thread-cache freelist pop/push (PIM-malloc frontend).
+
+One grid step = one thread cache (grid = T threads x C cores flattened by the
+wrapper). Each thread's NC size-class LIFO stacks live in a VMEM block; a pop
+or push is O(1) — the paper's lock-free frontend. Batched across threads this
+is the vectorized analogue of 24 tasklets independently hitting their caches.
+
+Ops (per thread): op = 0 pop(class), 1 push(class, ptr), -1 idle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(op_ref, cls_ref, ptr_in_ref, stacks_ref, counts_ref,
+            ptr_out_ref, counts_out_ref, stacks_out_ref, *, cap: int):
+    op = op_ref[0]
+    c = jnp.maximum(cls_ref[0], 0)
+    cnt = counts_ref[0, c]
+
+    is_pop = (op == 0) & (cnt > 0)
+    is_push = (op == 1) & (cnt < cap)
+
+    pos_pop = jnp.maximum(cnt - 1, 0)
+    popped = stacks_ref[0, c, pos_pop]
+    ptr_out_ref[0] = jnp.where(is_pop, popped, jnp.int32(-1))
+
+    pos_push = jnp.minimum(cnt, cap - 1)
+    old = stacks_ref[0, c, pos_push]
+    stacks_out_ref[0, :, :] = stacks_ref[0, :, :]
+    stacks_out_ref[0, c, pos_push] = jnp.where(is_push, ptr_in_ref[0], old)
+
+    delta = jnp.where(is_pop, -1, jnp.where(is_push, 1, 0))
+    counts_out_ref[0, :] = counts_ref[0, :]
+    counts_out_ref[0, c] = cnt + delta
+
+
+def freelist_op_kernel(stacks, counts, op, cls, ptr_in, *, interpret: bool = False):
+    """Apply one freelist op per thread.
+
+    stacks: int32[T, NC, CAP]; counts: int32[T, NC]
+    op/cls/ptr_in: int32[T]
+    Returns (ptr_out [T], new_counts, new_stacks).
+    """
+    T, NC, CAP = stacks.shape
+    kern = functools.partial(_kernel, cap=CAP)
+    return pl.pallas_call(
+        kern,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),            # op
+            pl.BlockSpec((1,), lambda i: (i,)),            # cls
+            pl.BlockSpec((1,), lambda i: (i,)),            # ptr_in
+            pl.BlockSpec((1, NC, CAP), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, NC), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, NC), lambda i: (i, 0)),
+            pl.BlockSpec((1, NC, CAP), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((T, NC), jnp.int32),
+            jax.ShapeDtypeStruct((T, NC, CAP), jnp.int32),
+        ],
+        interpret=interpret,
+    )(op, cls, ptr_in, stacks, counts)

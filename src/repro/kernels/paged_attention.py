@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: single-token decode attention over a *paged* KV cache.
+
+This is where PIM-malloc becomes a first-class serving feature: the KV cache
+is a per-device page pool managed by `repro.core.pim_malloc` (thread-cache
+frontend = per-sequence freelists, buddy backend = contiguous extents), and
+attention consumes the resulting page tables directly.
+
+TPU-native structure (mirrors jax's official TPU paged-attention design):
+  * grid = (batch, kv_head, pages_per_seq); the page axis is the innermost,
+    sequentially-iterated grid dim.
+  * the page table is a **scalar-prefetch** operand: the KV BlockSpec's
+    index_map reads `page_table[b, j]` to choose which physical page the
+    pipeline DMAs HBM->VMEM next — dynamic gather expressed as block
+    indexing, so the MXU never stalls on it.
+  * online softmax (m, l, acc) in VMEM scratch across page steps.
+
+Validated in interpret mode against `ref.paged_attention_ref` (pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, page_size: int, scale: float, pages_per_seq: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)       # [G, D] query heads of this kv head
+    k = k_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)    # [page_size, D]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [G, P]
+    pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+    valid = pos < sl_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)                  # [G, 1]
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                     # [G, P]
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_prev * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(j == pages_per_seq - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pages, v_pages, page_table, seq_lens, *,
+                           interpret: bool = False):
+    """Decode attention: one new token per sequence against paged KV.
+
+    q:          [B, H, D] current-step queries (H = KVH * G)
+    k_pages:    [N_pages, page_size, KVH, D] physical page pool
+    v_pages:    [N_pages, page_size, KVH, D]
+    page_table: int32[B, P] physical page ids per sequence (-1 = unmapped)
+    seq_lens:   int32[B] valid tokens per sequence
+    Returns [B, H, D].
+    """
+    B, H, D = q.shape
+    N, page_size, KVH, Dk = k_pages.shape
+    assert Dk == D and H % KVH == 0
+    G = H // KVH
+    P = page_table.shape[1]
+    scale = 1.0 / (D ** 0.5)
+
+    q4 = q.reshape(B, KVH, G, D)
+    pt = jnp.maximum(page_table, 0).astype(jnp.int32)
+
+    grid = (B, KVH, P)
+    kern = functools.partial(_kernel, page_size=page_size, scale=scale,
+                             pages_per_seq=P)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # page_table, seq_lens
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D), lambda b, h, j, pt, sl: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, j, pt, sl: (pt[b, j], 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, j, pt, sl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),   # m
+                pltpu.VMEM((G, 1), jnp.float32),   # l
+                pltpu.VMEM((G, D), jnp.float32),   # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        interpret=interpret,
+    )(pt, seq_lens, q4, k_pages, v_pages)
+    return out.reshape(B, H, D)

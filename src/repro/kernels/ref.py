@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import buddy
+from repro.core.buddy import BuddyConfig, BuddyState
+
+
+def buddy_alloc_batch_ref(tree, sizes, *, heap_bytes: int, min_block: int):
+    """Reference for kernels.buddy_traverse: vmapped scan of core.buddy.alloc."""
+    cfg = BuddyConfig(heap_bytes=heap_bytes, min_block=min_block)
+
+    def per_core(tree_row, sizes_row):
+        st = BuddyState(longest=tree_row)
+        st, offs, _ = buddy.alloc_batch(cfg, st, sizes_row)
+        return offs, st.longest
+
+    offs, new_tree = jax.vmap(per_core)(tree, sizes)
+    return offs, new_tree
+
+
+def freelist_op_ref(stacks, counts, op, cls, ptr_in):
+    """Reference for kernels.freelist: vectorized pop/push per thread."""
+    T, NC, CAP = stacks.shape
+    t = jnp.arange(T)
+    c = jnp.maximum(cls, 0)
+    cnt = counts[t, c]
+    is_pop = (op == 0) & (cnt > 0)
+    is_push = (op == 1) & (cnt < CAP)
+
+    pos_pop = jnp.maximum(cnt - 1, 0)
+    ptr_out = jnp.where(is_pop, stacks[t, c, pos_pop], -1).astype(jnp.int32)
+
+    pos_push = jnp.minimum(cnt, CAP - 1)
+    new_stacks = stacks.at[t, c, pos_push].set(
+        jnp.where(is_push, ptr_in, stacks[t, c, pos_push])
+    )
+    delta = jnp.where(is_pop, -1, jnp.where(is_push, 1, 0))
+    new_counts = counts.at[t, c].add(delta)
+    return ptr_out, new_counts, new_stacks
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Reference for kernels.paged_attention: dense gather + masked softmax."""
+    B, H, D = q.shape
+    N, page_size, KVH, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // KVH
+    scale = 1.0 / (D ** 0.5)
+
+    pt = jnp.maximum(page_table, 0)
+    k = k_pages[pt]                       # [B, P, page, KVH, D]
+    v = v_pages[pt]
+    S = P * page_size
+    k = k.reshape(B, S, KVH, D).astype(jnp.float32)
+    v = v.reshape(B, S, KVH, D).astype(jnp.float32)
+    qh = q.reshape(B, KVH, G, D).astype(jnp.float32)
+
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k) * scale
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < seq_lens[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,4 @@
+from . import paged
+from .paged import PagePool
+
+__all__ = ["paged", "PagePool"]

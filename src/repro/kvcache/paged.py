@@ -1,0 +1,284 @@
+"""Paged KV cache backed by PIM-malloc — the paper's technique as a
+first-class serving feature.
+
+Layout (distributed path): **per-sequence page pools**
+    k_pages [L, B, P, page, KVH, hd]
+Each sequence owns a reserved extent of P physical pages (exactly what the
+buddy backend hands out at prefill); the page table indirects logical ->
+physical *within* that extent, and single-page decode growth is served by
+the thread-cache frontend. Sharding: B over ('pod','data') — every device
+owns the pools AND page tables AND allocator metadata of its own sequences,
+i.e. the paper's winning PIM-Metadata/PIM-Executed placement, with zero
+cross-device metadata. KV heads / head_dim shard over 'model'.
+
+The single-device serving path flattens the per-seq pools into the shared
+pool the Pallas paged-attention kernel expects ([B*P, page, KVH, hd] with
+global page ids), so the TPU kernel and the allocator-shared-pool story are
+exercised end-to-end in examples/serve_paged.py.
+
+`attend` implementations:
+  * 'ref'    — pure-jnp batched gather + masked softmax; GSPMD-partitionable
+               (used in pjit'd serve steps / the dry run).
+  * 'kernel' — Pallas TPU kernel (scalar-prefetched page indices, online
+               softmax in VMEM scratch).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pim_malloc
+from repro.core.pim_malloc import PimMallocConfig
+
+PAGE_UNIT = 16  # allocator bytes per page (smallest size class)
+
+ATTEND_IMPL = "ref"  # module default; override per call
+
+
+def pages_per_seq(max_seq: int, page_size: int) -> int:
+    return math.ceil(max_seq / page_size)
+
+
+def cache_spec(*, n_layers: int, batch: int, max_seq: int, page_size: int,
+               kv_heads: int, head_dim: int, dtype):
+    """ShapeDtypeStruct pytree for the paged cache (dry-run friendly)."""
+    P = pages_per_seq(max_seq, page_size)
+    sds = jax.ShapeDtypeStruct
+    return {
+        "k_pages": sds((n_layers, batch, P, page_size, kv_heads, head_dim), dtype),
+        "v_pages": sds((n_layers, batch, P, page_size, kv_heads, head_dim), dtype),
+        "page_table": sds((batch, P), jnp.int32),
+        "seq_lens": sds((batch,), jnp.int32),
+    }
+
+
+def init_cache(*, n_layers: int, batch: int, max_seq: int, page_size: int,
+               kv_heads: int, head_dim: int, dtype):
+    """Zero cache with the identity page table (contiguous buddy extent)."""
+    spec = cache_spec(n_layers=n_layers, batch=batch, max_seq=max_seq,
+                      page_size=page_size, kv_heads=kv_heads,
+                      head_dim=head_dim, dtype=dtype)
+    P = spec["page_table"].shape[1]
+    return {
+        "k_pages": jnp.zeros(spec["k_pages"].shape, dtype),
+        "v_pages": jnp.zeros(spec["v_pages"].shape, dtype),
+        "page_table": jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32),
+                                       (batch, P)).copy(),
+        "seq_lens": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def write_prefill(pages, kv, page_table):
+    """pages [B,P,page,KVH,hd]; kv [B,S,KVH,hd]; S % page_size == 0.
+
+    put_along_axis (NOT .at[bidx, idx]) so the scatter carries batching
+    dims — GSPMD keeps the batch axis sharded instead of involuntarily
+    replicating the pool across the data axis."""
+    B, P, page_size, KVH, hd = pages.shape
+    S = kv.shape[1]
+    assert S % page_size == 0, (S, page_size)
+    sp = S // page_size
+    kv4 = kv.reshape(B, sp, page_size, KVH, hd).astype(pages.dtype)
+    idx = jnp.clip(page_table[:, :sp], 0, P - 1)
+    return jax.vmap(lambda p, i, v: p.at[i].set(v))(pages, idx, kv4)
+
+
+def write_token(pages, kv, page_table, pos):
+    """pages [B,P,page,KVH,hd]; kv [B,KVH,hd]; pos int32[B] (0-based slot).
+
+    Flattens (P, page) so the write is one batched put_along_axis."""
+    B, P, page_size, KVH, hd = pages.shape
+    pidx = jnp.take_along_axis(page_table, (pos // page_size)[:, None], axis=1)[:, 0]
+    pidx = jnp.clip(pidx, 0, P - 1)
+    slot = pos % page_size
+    return jax.vmap(lambda p, i, s, v: p.at[i, s].set(v))(
+        pages, pidx, slot, kv.astype(pages.dtype))
+
+
+def _attend_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Batched-gather reference: per-seq pools stay local on the data axis.
+
+    take_along_axis (batching dims!) + bf16 gathers; fp32 only inside the
+    einsum accumulators."""
+    B, H, D = q.shape
+    _, P, page_size, KVH, _ = k_pages.shape
+    G = H // KVH
+    scale = 1.0 / (D ** 0.5)
+    pt = jnp.clip(page_table, 0, P - 1)
+    k = jax.vmap(lambda p, i: p[i])(k_pages, pt).reshape(B, P * page_size,
+                                                         KVH, D)
+    v = jax.vmap(lambda p, i: p[i])(v_pages, pt).reshape(B, P * page_size,
+                                                         KVH, D)
+    qh = q.reshape(B, KVH, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(k.dtype), k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(P * page_size)[None, None, None, :]
+    mask = pos < seq_lens[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(k.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def attend(q, k_pages, v_pages, page_table, seq_lens, impl: str | None = None):
+    """Decode attention over per-seq paged KV. q [B,H,hd] -> [B,H,hd]."""
+    impl = impl or ATTEND_IMPL
+    if impl == "kernel":
+        from repro.kernels import ops
+        B, P, page_size, KVH, hd = k_pages.shape
+        kp = k_pages.reshape(B * P, page_size, KVH, hd)
+        vp = v_pages.reshape(B * P, page_size, KVH, hd)
+        pt_global = (jnp.arange(B, dtype=jnp.int32)[:, None] * P
+                     + jnp.clip(page_table, 0, P - 1))
+        return ops.paged_attention_op(q, kp, vp, pt_global, seq_lens)
+    return _attend_ref(q, k_pages, v_pages, page_table, seq_lens)
+
+
+def _ambient_mesh():
+    """The mesh set via jax.set_mesh (jax >= 0.8); None when absent."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if not mesh.empty and "model" in mesh.axis_names:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def write_attend_seqpar(q, k_new, v_new, k_pages, v_pages, page_table, pos):
+    """Flash-decoding under shard_map: pools shard their PHYSICAL page dim
+    over 'model' (sequence parallelism). Each shard writes the new token iff
+    it owns the target page (no cross-shard scatter), attends over its local
+    pages with an online-softmax partial, and the partials combine with
+    pmax/psum of [B, KVH, G(, hd)] stats — O(KB) collectives per layer
+    instead of the GSPMD fallback's full-pool gathers/reduces.
+
+    q [B,H,hd]; k_new/v_new [B,KVH,hd]; pools [B,P,page,KVH,hd]; pos [B].
+    Returns (o [B,H,hd], k_pages, v_pages). Falls back to the write_token +
+    attend pair when no 'model' mesh is ambient (single-device tests).
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        kp = write_token(k_pages, k_new, page_table, pos)
+        vp = write_token(v_pages, v_new, page_table, pos)
+        return attend(q, kp, vp, page_table, pos + 1), kp, vp
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, H, hd = q.shape
+    _, Pn, page_size, KVH, _ = k_pages.shape
+    G = H // KVH
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    dpb = dp if B % max(
+        1, int(np.prod([mesh.shape[a] for a in dp]))) == 0 else None
+
+    def local_fn(q, kn, vn, kp, vp, pt, pos):
+        from jax import lax
+        Bl = q.shape[0]
+        Pl = kp.shape[1]
+        midx = lax.axis_index("model")
+        base = midx * Pl
+        # ---- local write of the new token --------------------------------
+        pidx = jnp.take_along_axis(pt, (pos // page_size)[:, None], axis=1)[:, 0]
+        mine = (pidx >= base) & (pidx < base + Pl)
+        li = jnp.clip(pidx - base, 0, Pl - 1)
+        slot = pos % page_size
+
+        def wr(p, i, s, v, w):
+            return p.at[i, s].set(jnp.where(w, v.astype(p.dtype), p[i, s]))
+
+        kp = jax.vmap(wr)(kp, li, slot, kn, mine)
+        vp = jax.vmap(wr)(vp, li, slot, vn, mine)
+        # ---- logical positions of local physical pages -------------------
+        inv = jax.vmap(lambda row: jnp.full((Pn,), -1, jnp.int32).at[
+            jnp.clip(row, 0, Pn - 1)].set(
+                jnp.arange(Pn, dtype=jnp.int32)))(pt)
+        inv_local = lax.dynamic_slice(inv, (jnp.int32(0), base), (Bl, Pl))
+        grid = (inv_local[:, :, None] * page_size
+                + jnp.arange(page_size)[None, None, :])
+        valid = (inv_local[:, :, None] >= 0) & (grid <= pos[:, None, None])
+        valid = valid.reshape(Bl, 1, 1, Pl * page_size)
+        # ---- local flash partial ------------------------------------------
+        k2 = kp.reshape(Bl, Pl * page_size, KVH, hd)
+        v2 = vp.reshape(Bl, Pl * page_size, KVH, hd)
+        qh = q.reshape(Bl, KVH, G, hd)
+        s = jnp.einsum("bkgd,btkd->bkgt", qh.astype(k2.dtype), k2,
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+        s = jnp.where(valid, s, -1e30)
+        m = jnp.max(s, axis=-1)
+        m_g = lax.pmax(m, "model")
+        p = jnp.exp(s - m_g[..., None])
+        p = jnp.where(valid, p, 0.0)
+        l = lax.psum(jnp.sum(p, axis=-1), "model")
+        o_p = jnp.einsum("bkgt,btkd->bkgd", p.astype(k2.dtype), v2,
+                         preferred_element_type=jnp.float32)
+        o = lax.psum(o_p, "model") / jnp.maximum(l, 1e-30)[..., None]
+        return o.reshape(Bl, H, hd).astype(q.dtype), kp, vp
+
+    pool_spec = P(dpb, "model", None, None, None)
+    o, kp, vp = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dpb, None, None), P(dpb, None, None), P(dpb, None, None),
+                  pool_spec, pool_spec, P(dpb, None), P(dpb,)),
+        out_specs=(P(dpb, None, None), pool_spec, pool_spec),
+        check_rep=False,
+    )(q, k_new, v_new, k_pages, v_pages, page_table, pos)
+    return o, kp, vp
+
+
+class PagePool:
+    """Host-side page allocator for serving: PIM-malloc manages page ids.
+
+    Pages are allocator 'bytes' at PAGE_UNIT per page; ptr -> page_id =
+    ptr // PAGE_UNIT. One pool per device shard (the allocator state is a
+    fixed-shape pytree, so a multi-device pool is a vmap/shard_map of this
+    over the data axis — see examples/serve_paged.py).
+    """
+
+    def __init__(self, n_pages: int, num_threads: int = 16):
+        assert n_pages & (n_pages - 1) == 0, "n_pages must be pow2"
+        self.n_pages = n_pages
+        self.cfg = PimMallocConfig(
+            heap_bytes=n_pages * PAGE_UNIT, num_threads=num_threads,
+            size_classes=(16, 32, 64, 128, 256, 512, 1024, 2048),
+            block_bytes=4096,  # 256-page blocks feed the frontend
+        )
+        self.state = pim_malloc.init(self.cfg)
+
+    def alloc_pages(self, n: int, thread: int = 0) -> jnp.ndarray:
+        """Contiguous extent of `n` pages; returns page ids [n] (empty on OOM)."""
+        sizes = jnp.zeros((self.cfg.num_threads,), jnp.int32).at[thread].set(
+            n * PAGE_UNIT)
+        active = jnp.zeros((self.cfg.num_threads,), bool).at[thread].set(True)
+        self.state, ptrs, _ = pim_malloc.malloc(self.cfg, self.state, sizes, active)
+        ptr = int(ptrs[thread])
+        if ptr < 0:
+            return jnp.zeros((0,), jnp.int32)
+        base = ptr // PAGE_UNIT
+        return base + jnp.arange(n, dtype=jnp.int32)
+
+    def alloc_page_batch(self, threads):
+        """One single-page allocation per requesting thread (decode growth).
+        threads: bool[T] mask. Returns (int32[T] page ids (-1 = none), event)."""
+        sizes = jnp.where(jnp.asarray(threads), PAGE_UNIT, 0).astype(jnp.int32)
+        self.state, ptrs, ev = pim_malloc.malloc(self.cfg, self.state, sizes,
+                                                 jnp.asarray(threads))
+        return jnp.where(ptrs >= 0, ptrs // PAGE_UNIT, -1), ev
+
+    def free_extent(self, first_page: int, thread: int = 0) -> None:
+        ptrs = jnp.full((self.cfg.num_threads,), -1, jnp.int32).at[thread].set(
+            int(first_page) * PAGE_UNIT)
+        self.state, _ = pim_malloc.free(self.cfg, self.state, ptrs)
+
+    def gc(self) -> None:
+        self.state = pim_malloc.gc(self.cfg, self.state)
+
+    @property
+    def stats(self) -> dict:
+        return {k: int(v) for k, v in self.state.stats._asdict().items()}

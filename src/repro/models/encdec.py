@@ -1,0 +1,226 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv audio frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings [B, enc_frames, D]. Encoder layers are
+bidirectional self-attention; decoder layers are causal self-attention +
+cross-attention + MLP. Decode uses the paged KV cache for decoder
+self-attention and caches the (static) encoder K/V densely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kvcache import paged
+from . import layers
+from .config import ArchConfig
+
+
+def param_shapes(cfg: ArchConfig):
+    L, Le = cfg.n_layers, cfg.enc_layers
+    D, V, F = cfg.d_model, cfg.padded_vocab, cfg.d_ff
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+
+    def attn_mats(L):
+        if cfg.attn_4d:
+            return {
+                "wq": ((L, D, H, hd), dt), "wk": ((L, D, KVH, hd), dt),
+                "wv": ((L, D, KVH, hd), dt), "wo": ((L, H, hd, D), dt),
+            }
+        return {
+            "wq": ((L, D, H * hd), dt), "wk": ((L, D, KVH * hd), dt),
+            "wv": ((L, D, KVH * hd), dt), "wo": ((L, H * hd, D), dt),
+        }
+
+    enc = {"ln1": ((Le, D), dt), "ln2": ((Le, D), dt),
+           "w1": ((Le, D, F), dt), "w2": ((Le, F, D), dt)}
+    enc.update({k: ((Le,) + v[0][1:], dt) for k, v in attn_mats(Le).items()})
+    dec = {"ln1": ((L, D), dt), "ln_x": ((L, D), dt), "ln2": ((L, D), dt),
+           "w1": ((L, D, F), dt), "w2": ((L, F, D), dt)}
+    dec.update(attn_mats(L))
+    dec.update({f"x{k}": v for k, v in attn_mats(L).items()})
+    return {"embed": ((V, D), dt), "enc": enc, "dec": dec,
+            "ln_enc": ((D,), dt), "ln_f": ((D,), dt)}
+
+
+def init(cfg: ArchConfig, key):
+    return layers.init_params(param_shapes(cfg), key)
+
+
+def encode(cfg: ArchConfig, params, enc_embeds):
+    """enc_embeds [B, T, D] (stub frontend output) -> encoder hidden."""
+    B, T, D = enc_embeds.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = enc_embeds.astype(cfg.dtype)
+
+    def blk(x, lp):
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        o = layers.attention(q, k, v, causal=False)
+        x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        return x + layers.mlp(h2, lp["w1"], lp["w2"], None, "gelu")
+
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+    x, _ = lax.scan(lambda x, lp: (blk(x, lp), None), x, params["enc"])
+    return layers.rms_norm(x, params["ln_enc"])
+
+
+def _dec_block(cfg, x, positions, enc_out, lp):
+    B, S, D = x.shape
+    T = enc_out.shape[1]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # causal self-attention
+    h = layers.rms_norm(x, lp["ln1"])
+    q = layers.qk_proj(h, lp["wq"], H, hd)
+    k = layers.qk_proj(h, lp["wk"], KVH, hd)
+    v = layers.qk_proj(h, lp["wv"], KVH, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+    o = attn(q, k, v, causal=True)
+    x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+    # cross-attention
+    hx = layers.rms_norm(x, lp["ln_x"])
+    qx = layers.qk_proj(hx, lp["xwq"], H, hd)
+    kx = layers.qk_proj(enc_out, lp["xwk"], KVH, hd)
+    vx = layers.qk_proj(enc_out, lp["xwv"], KVH, hd)
+    xattn = layers.pick_attention(S, T, cfg.flash_min_seq)
+    ox = xattn(qx, kx, vx, causal=False)
+    x = x + layers.out_proj(ox, lp["xwo"]).astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln2"])
+    return x + layers.mlp(h2, lp["w1"], lp["w2"], None, "gelu")
+
+
+def forward(cfg: ArchConfig, params, tokens, enc_embeds):
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, enc_embeds)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    blk = functools.partial(_dec_block, cfg)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+    x, _ = lax.scan(lambda x, lp: (blk(x, positions, enc_out, lp), None),
+                    x, params["dec"])
+    return layers.rms_norm(x, params["ln_f"])
+
+
+def logits_fn(cfg, params, hidden):
+    return layers.mask_padded_logits(
+        hidden @ params["embed"].T.astype(hidden.dtype), cfg.vocab)  # tied
+
+
+def loss(cfg: ArchConfig, params, batch):
+    hidden = forward(cfg, params, batch["tokens"], batch["enc_embeds"])
+    logits = logits_fn(cfg, params, hidden)
+    l = layers.cross_entropy(logits, batch["labels"])
+    return l, {"loss": l}
+
+
+# ----------------------------------------------------------------- serving --
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    spec = paged.cache_spec(
+        n_layers=cfg.n_layers, batch=batch, max_seq=max_seq,
+        page_size=cfg.page_size, kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        dtype=cfg.dtype,
+    )
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    L, T = cfg.n_layers, cfg.enc_frames
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim
+    spec["enc_k"] = sds((L, batch, T, KVH, hd), dt)
+    spec["enc_v"] = sds((L, batch, T, KVH, hd), dt)
+    return spec
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    """Encode audio, precompute per-layer cross K/V, prefill decoder."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, batch["enc_embeds"])
+    T = enc_out.shape[1]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+
+    def step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+        o = attn(q, k, v, causal=True)
+        x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+        hx = layers.rms_norm(x, lp["ln_x"])
+        qx = layers.qk_proj(hx, lp["xwq"], H, hd)
+        kx = layers.qk_proj(enc_out, lp["xwk"], KVH, hd)
+        vx = layers.qk_proj(enc_out, lp["xwv"], KVH, hd)
+        xattn = layers.pick_attention(S, T, cfg.flash_min_seq)
+        ox = xattn(qx, kx, vx, causal=False)
+        x = x + layers.out_proj(ox, lp["xwo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + layers.mlp(h2, lp["w1"], lp["w2"], None, "gelu")
+        k_pages = paged.write_prefill(k_pages, k, cache["page_table"])
+        v_pages = paged.write_prefill(v_pages, v, cache["page_table"])
+        return x, (k_pages, v_pages, kx, vx)
+
+    x, (k_pages, v_pages, enc_k, enc_v) = lax.scan(
+        step, x, (params["dec"], cache["k_pages"], cache["v_pages"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, -1])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages, enc_k=enc_k,
+                 enc_v=enc_v, seq_lens=jnp.full((B,), S, jnp.int32))
+    return cache, logits
+
+
+def decode(cfg: ArchConfig, params, cache, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["seq_lens"]
+    x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]
+
+    def step(x, xs):
+        lp, k_pages, v_pages, enc_k, enc_v = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)[:, 0]
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)[:, 0]
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)[:, 0]
+        q = layers.rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = layers.rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        if cfg.kv_seq_parallel:
+            o, k_pages, v_pages = paged.write_attend_seqpar(
+                q, k, v, k_pages, v_pages, cache["page_table"], pos)
+        else:
+            k_pages = paged.write_token(k_pages, k, cache["page_table"], pos)
+            v_pages = paged.write_token(v_pages, v, cache["page_table"], pos)
+            o = paged.attend(q, k_pages, v_pages, cache["page_table"], pos + 1)
+        x = x + layers.out_proj(o[:, None], lp["wo"]).astype(x.dtype)
+        hx = layers.rms_norm(x, lp["ln_x"])
+        qx = layers.qk_proj(hx, lp["xwq"], H, hd)
+        ox = layers.attention(qx, enc_k, enc_v, causal=False)
+        x = x + layers.out_proj(ox, lp["xwo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + layers.mlp(h2, lp["w1"], lp["w2"], None, "gelu")
+        return x, (k_pages, v_pages)
+
+    x, (k_pages, v_pages) = lax.scan(
+        step, x, (params["dec"], cache["k_pages"], cache["v_pages"],
+                  cache["enc_k"], cache["enc_v"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, 0])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages, seq_lens=pos + 1)
+    return cache, logits

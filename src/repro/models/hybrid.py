@@ -1,0 +1,414 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern 1:2 — repeating groups of (recurrent, recurrent, local-attn),
+with any remainder layers recurrent. Every layer has its own GeGLU MLP.
+RG-LRU trains via `lax.associative_scan` (parallel linear recurrence) and
+decodes with an O(1) state update; local attention uses a rolling
+`window`-token KV buffer, so `long_500k` decode has constant per-token state.
+
+Deviation noted in DESIGN.md: RG-LRU input/recurrence gates use dense
+projections (the paper uses block-diagonal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers
+from .config import ArchConfig
+
+RG_C = 8.0  # Griffin's fixed scalar in a_t = exp(-c * softplus(lam) * r_t)
+
+
+def _group_counts(cfg: ArchConfig):
+    return cfg.n_layers // 3, cfg.n_layers % 3  # (groups of R,R,A; tail R's)
+
+
+def _rec_shapes(cfg: ArchConfig, L: int):
+    D = cfg.d_model
+    dt = cfg.dtype
+    return {
+        "ln": ((L, D), dt),
+        "wx": ((L, D, D), dt),
+        "wy": ((L, D, D), dt),
+        "conv_w": ((L, cfg.conv_width, D), dt),
+        "conv_b": ((L, D), dt),
+        "w_r": ((L, D, D), dt),
+        "w_i": ((L, D, D), dt),
+        "a_param": ((L, D), "float32"),
+        "w_out": ((L, D, D), dt),
+        "ln_mlp": ((L, D), dt),
+        "m1": ((L, D, cfg.d_ff), dt),
+        "m2": ((L, cfg.d_ff, D), dt),
+        "m3": ((L, D, cfg.d_ff), dt),
+    }
+
+
+def _attn_shapes(cfg: ArchConfig, L: int):
+    D, H, KVH, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                        cfg.d_ff)
+    dt = cfg.dtype
+    return {
+        "ln": ((L, D), dt),
+        "wq": ((L, D, H, hd) if cfg.attn_4d else (L, D, H * hd), dt),
+        "wk": ((L, D, KVH, hd) if cfg.attn_4d else (L, D, KVH * hd), dt),
+        "wv": ((L, D, KVH, hd) if cfg.attn_4d else (L, D, KVH * hd), dt),
+        "wo": ((L, H, hd, D) if cfg.attn_4d else (L, H * hd, D), dt),
+        "ln_mlp": ((L, D), dt),
+        "m1": ((L, D, F), dt),
+        "m2": ((L, F, D), dt),
+        "m3": ((L, D, F), dt),
+    }
+
+
+def param_shapes(cfg: ArchConfig):
+    G, R = _group_counts(cfg)
+    dt = cfg.dtype
+    shapes = {
+        "embed": ((cfg.padded_vocab, cfg.d_model), dt),
+        "rec1": _rec_shapes(cfg, G),
+        "rec2": _rec_shapes(cfg, G),
+        "attn": _attn_shapes(cfg, G),
+        "ln_f": ((cfg.d_model,), dt),
+    }
+    if R:
+        shapes["tail"] = _rec_shapes(cfg, R)
+    return shapes
+
+
+def init(cfg: ArchConfig, key):
+    p = layers.init_params(param_shapes(cfg), key)
+    G, R = _group_counts(cfg)
+    # a_param init so a^(1/c) ~ uniform(0.9, 0.999): softplus(a_param) ~ small
+    for name, L in (("rec1", G), ("rec2", G), ("tail", R)):
+        if L and name in p:
+            p[name]["a_param"] = jnp.full((L, cfg.d_model), 0.65, jnp.float32)
+    return p
+
+
+def _rglru_scan(x, r, i, a_param):
+    """Parallel RG-LRU. x/r/i: [B,S,D] (r,i post-sigmoid); returns [B,S,D]."""
+    log_a = (-RG_C * jax.nn.softplus(a_param)[None, None, :]
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = gated * (i.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def _rglru_step(state, x, r, i, a_param):
+    """One-token RG-LRU. state/x/r/i: [B, D] -> (state, y)."""
+    log_a = -RG_C * jax.nn.softplus(a_param)[None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    h = a * state + gated * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return h, h.astype(x.dtype)
+
+
+def _conv_shift(state, x):
+    """Causal depthwise conv states. state [B,W-1,D]; x [B,S,D]."""
+    return jnp.concatenate([state, x], axis=1)[:, -(state.shape[1]):, :]
+
+
+def _rec_mixer_train(cfg, x, lp):
+    h = layers.rms_norm(x, lp["ln"])
+    xb = h @ lp["wx"]
+    yb = h @ lp["wy"]
+    W = cfg.conv_width
+    conv_state = jnp.zeros((x.shape[0], W - 1, xb.shape[-1]), xb.dtype)
+    xp = jnp.concatenate([conv_state, xb], axis=1)
+    xc = sum(xp[:, i: i + xb.shape[1], :] * lp["conv_w"][i][None, None, :]
+             for i in range(W)) + lp["conv_b"][None, None, :]
+    r = jax.nn.sigmoid(xc @ lp["w_r"])
+    i = jax.nn.sigmoid(xc @ lp["w_i"])
+    y = _rglru_scan(xc, r, i, lp["a_param"])
+    out = (y * jax.nn.gelu(yb)) @ lp["w_out"]
+    x = x + out.astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln_mlp"])
+    return x + layers.mlp(h2, lp["m1"], lp["m2"], lp["m3"], "geglu")
+
+
+def _attn_mixer_train(cfg, x, positions, lp):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = layers.rms_norm(x, lp["ln"])
+    q = layers.qk_proj(h, lp["wq"], H, hd)
+    k = layers.qk_proj(h, lp["wk"], KVH, hd)
+    v = layers.qk_proj(h, lp["wv"], KVH, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+    o = attn(q, k, v, causal=True, window=cfg.window)
+    x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln_mlp"])
+    return x + layers.mlp(h2, lp["m1"], lp["m2"], lp["m3"], "geglu")
+
+
+def forward(cfg: ArchConfig, params, tokens, positions=None):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+
+    rec = functools.partial(_rec_mixer_train, cfg)
+    att = functools.partial(_attn_mixer_train, cfg)
+    if cfg.remat:
+        rec, att = jax.checkpoint(rec), jax.checkpoint(att)
+
+    def group(x, gp):
+        x = layers.activation_constraint(x, seq_over_model=cfg.seq_shard)
+        x = rec(x, gp["rec1"])
+        x = rec(x, gp["rec2"])
+        x = att(x, positions, gp["attn"])
+        return x, None
+
+    G, R = _group_counts(cfg)
+    if G:
+        gp = {k: params[k] for k in ("rec1", "rec2", "attn")}
+        x, _ = lax.scan(group, x, gp)
+    if R:
+        x, _ = lax.scan(lambda x, lp: (rec(x, lp), None), x, params["tail"])
+    return layers.rms_norm(x, params["ln_f"])
+
+
+def logits_fn(cfg, params, hidden):
+    return layers.mask_padded_logits(
+        hidden @ params["embed"].T.astype(hidden.dtype), cfg.vocab)
+
+
+def loss(cfg: ArchConfig, params, batch):
+    hidden = forward(cfg, params, batch["tokens"])
+    logits = logits_fn(cfg, params, hidden)
+    l = layers.cross_entropy(logits, batch["labels"])
+    return l, {"loss": l}
+
+
+# ----------------------------------------------------------------- serving --
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    G, R = _group_counts(cfg)
+    D, W = cfg.d_model, cfg.conv_width
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim
+    win = min(cfg.window, max_seq)
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.dtype)
+    n_rec = 2 * G + R
+    return {
+        "rg_state": sds((n_rec, batch, D), jnp.float32),
+        "conv_state": sds((n_rec, batch, W - 1, D), dt),
+        "win_k": sds((G, batch, win, KVH, hd), dt),
+        "win_v": sds((G, batch, win, KVH, hd), dt),
+        "seq_lens": sds((batch,), jnp.int32),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq))
+
+
+def _rec_mixer_decode(cfg, x, lp, rg_state, conv_state):
+    """x [B,1,D]; rg_state [B,D]; conv_state [B,W-1,D]."""
+    h = layers.rms_norm(x, lp["ln"])
+    xb = h @ lp["wx"]
+    yb = h @ lp["wy"]
+    W = cfg.conv_width
+    xp = jnp.concatenate([conv_state.astype(xb.dtype), xb], axis=1)  # [B,W,D]
+    xc = sum(xp[:, i: i + 1, :] * lp["conv_w"][i][None, None, :]
+             for i in range(W)) + lp["conv_b"][None, None, :]
+    new_conv = xp[:, 1:, :]
+    r = jax.nn.sigmoid(xc @ lp["w_r"])[:, 0]
+    i = jax.nn.sigmoid(xc @ lp["w_i"])[:, 0]
+    rg_state, y = _rglru_step(rg_state, xc[:, 0], r, i, lp["a_param"])
+    out = (y[:, None, :] * jax.nn.gelu(yb)) @ lp["w_out"]
+    x = x + out.astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln_mlp"])
+    x = x + layers.mlp(h2, lp["m1"], lp["m2"], lp["m3"], "geglu")
+    return x, rg_state, new_conv
+
+
+def _attn_mixer_decode(cfg, x, lp, win_k, win_v, pos):
+    """Rolling-window MQA decode. win_k/v [B,win,KVH,hd]; pos [B]."""
+    B = x.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    win = win_k.shape[1]
+    h = layers.rms_norm(x, lp["ln"])
+    q = layers.qk_proj(h, lp["wq"], H, hd)[:, 0]
+    k = layers.qk_proj(h, lp["wk"], KVH, hd)[:, 0]
+    v = layers.qk_proj(h, lp["wv"], KVH, hd)[:, 0]
+    q = layers.rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = layers.rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    slot = pos % win
+    win_k = win_k.at[jnp.arange(B), slot].set(k.astype(win_k.dtype))
+    win_v = win_v.at[jnp.arange(B), slot].set(v.astype(win_v.dtype))
+    # slots valid if their stored position <= pos (always true after wrap)
+    slots = jnp.arange(win)[None, :]
+    valid = (slots <= pos[:, None]) | (pos[:, None] >= win)
+    G = H // KVH
+    qh = q.reshape(B, KVH, G, hd)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qh, win_k.astype(q.dtype),
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", p.astype(q.dtype),
+                   win_v.astype(q.dtype), preferred_element_type=jnp.float32)
+    o4 = o.reshape(B, 1, H, hd).astype(x.dtype)
+    x = x + layers.out_proj(o4, lp["wo"]).astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln_mlp"])
+    x = x + layers.mlp(h2, lp["m1"], lp["m2"], lp["m3"], "geglu")
+    return x, win_k, win_v
+
+
+def decode(cfg: ArchConfig, params, cache, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = cache["seq_lens"]
+    x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]
+    G, R = _group_counts(cfg)
+
+    def group(carry, xs):
+        x = carry
+        gp, rg1, cv1, rg2, cv2, wk, wv = xs
+        x, rg1, cv1 = _rec_mixer_decode(cfg, x, gp["rec1"], rg1, cv1)
+        x, rg2, cv2 = _rec_mixer_decode(cfg, x, gp["rec2"], rg2, cv2)
+        x, wk, wv = _attn_mixer_decode(cfg, x, gp["attn"], wk, wv, pos)
+        return x, (rg1, cv1, rg2, cv2, wk, wv)
+
+    rg = cache["rg_state"]
+    cv = cache["conv_state"]
+    if G:
+        gp = {k: params[k] for k in ("rec1", "rec2", "attn")}
+        xs = (gp, rg[0:2 * G:2], cv[0:2 * G:2], rg[1:2 * G:2], cv[1:2 * G:2],
+              cache["win_k"], cache["win_v"])
+        x, (rg1, cv1, rg2, cv2, wk, wv) = lax.scan(group, x, xs)
+        rg = rg.at[0:2 * G:2].set(rg1).at[1:2 * G:2].set(rg2)
+        cv = cv.at[0:2 * G:2].set(cv1).at[1:2 * G:2].set(cv2)
+    else:
+        wk, wv = cache["win_k"], cache["win_v"]
+    if R:
+        def tail(carry, xs):
+            x = carry
+            lp, rgt, cvt = xs
+            x, rgt, cvt = _rec_mixer_decode(cfg, x, lp, rgt, cvt)
+            return x, (rgt, cvt)
+
+        x, (rgt, cvt) = lax.scan(tail, x, (params["tail"], rg[2 * G:], cv[2 * G:]))
+        rg = rg.at[2 * G:].set(rgt)
+        cv = cv.at[2 * G:].set(cvt)
+
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, 0])
+    cache = dict(cache, rg_state=rg, conv_state=cv, win_k=wk, win_v=wv,
+                 seq_lens=pos + 1)
+    return cache, logits
+
+
+def _rec_mixer_prefill(cfg, x, lp):
+    """Train-path recurrent mixer that also returns (rg_state, conv_state)."""
+    h = layers.rms_norm(x, lp["ln"])
+    xb = h @ lp["wx"]
+    yb = h @ lp["wy"]
+    W = cfg.conv_width
+    conv0 = jnp.zeros((x.shape[0], W - 1, xb.shape[-1]), xb.dtype)
+    xp = jnp.concatenate([conv0, xb], axis=1)
+    xc = sum(xp[:, i: i + xb.shape[1], :] * lp["conv_w"][i][None, None, :]
+             for i in range(W)) + lp["conv_b"][None, None, :]
+    conv_state = xp[:, -(W - 1):, :]
+    r = jax.nn.sigmoid(xc @ lp["w_r"])
+    i = jax.nn.sigmoid(xc @ lp["w_i"])
+    log_a = (-RG_C * jax.nn.softplus(lp["a_param"])[None, None, :]
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = gated * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hfull = lax.associative_scan(combine, (a, b), axis=1)
+    rg_state = hfull[:, -1]  # [B, D] fp32
+    y = hfull.astype(x.dtype)
+    out = (y * jax.nn.gelu(yb)) @ lp["w_out"]
+    x = x + out.astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln_mlp"])
+    x = x + layers.mlp(h2, lp["m1"], lp["m2"], lp["m3"], "geglu")
+    return x, rg_state, conv_state
+
+
+def _attn_mixer_prefill(cfg, x, positions, lp, win):
+    """Train-path local attention that also fills the rolling window buffer."""
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = layers.rms_norm(x, lp["ln"])
+    q = layers.qk_proj(h, lp["wq"], H, hd)
+    k = layers.qk_proj(h, lp["wk"], KVH, hd)
+    v = layers.qk_proj(h, lp["wv"], KVH, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+    o = attn(q, k, v, causal=True, window=cfg.window)
+    xo = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+    h2 = layers.rms_norm(xo, lp["ln_mlp"])
+    xo = xo + layers.mlp(h2, lp["m1"], lp["m2"], lp["m3"], "geglu")
+    # rolling buffer: last `win` tokens at slots pos % win
+    last_k = k[:, -win:] if S >= win else k
+    last_v = v[:, -win:] if S >= win else v
+    pos_last = positions[:, -last_k.shape[1]:]
+    slots = pos_last % win
+    win_k = jnp.zeros((B, win, KVH, hd), k.dtype)
+    win_v = jnp.zeros((B, win, KVH, hd), v.dtype)
+    bidx = jnp.arange(B)[:, None]
+    win_k = win_k.at[bidx, slots].set(last_k)
+    win_v = win_v.at[bidx, slots].set(last_v)
+    return xo, win_k, win_v
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    """Parallel prefill: associative-scan RG-LRU + windowed attention, with
+    state capture for decode."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    G, R = _group_counts(cfg)
+    win = cache["win_k"].shape[2]
+
+    def group(x, gp):
+        x, rg1, cv1 = _rec_mixer_prefill(cfg, x, gp["rec1"])
+        x, rg2, cv2 = _rec_mixer_prefill(cfg, x, gp["rec2"])
+        x, wk, wv = _attn_mixer_prefill(cfg, x, positions, gp["attn"], win)
+        return x, (rg1, cv1, rg2, cv2, wk, wv)
+
+    rg = cache["rg_state"]
+    cv = cache["conv_state"]
+    wk, wv = cache["win_k"], cache["win_v"]
+    if G:
+        gp = {k: params[k] for k in ("rec1", "rec2", "attn")}
+        x, (rg1, cv1, rg2, cv2, wk, wv) = lax.scan(group, x, gp)
+        rg = rg.at[0:2 * G:2].set(rg1).at[1:2 * G:2].set(rg2)
+        cv = cv.at[0:2 * G:2].set(cv1).at[1:2 * G:2].set(cv2)
+    if R:
+        def tail(x, lp):
+            x, rgt, cvt = _rec_mixer_prefill(cfg, x, lp)
+            return x, (rgt, cvt)
+
+        x, (rgt, cvt) = lax.scan(tail, x, params["tail"])
+        rg = rg.at[2 * G:].set(rgt)
+        cv = cv.at[2 * G:].set(cvt)
+
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, -1])
+    cache = dict(cache, rg_state=rg, conv_state=cv, win_k=wk, win_v=wv,
+                 seq_lens=jnp.full((B,), S, jnp.int32))
+    return cache, logits

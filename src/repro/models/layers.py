@@ -1,0 +1,276 @@
+"""Shared model layers: norms, RoPE, (flash/GQA/local) attention, MLPs.
+
+All parameters are *stacked over layers* (leading L dim) so models scan over
+layers — small HLO, fast multi-device compiles, and remat-friendly.
+Matmuls run in the config dtype with fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def _gqa_scores_einsum(q, k):
+    """q: [B,S,KVH,G,D], k: [B,T,KVH,D] -> [B,KVH,G,S,T] fp32."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              q_offset: int = 0):
+    """Materializing GQA attention (use for short sequences).
+
+    q: [B, S, H, D]; k, v: [B, T, KVH, D]. Returns [B, S, H, D].
+    window > 0 -> local (sliding-window) attention.
+    """
+    B, S, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qh = q.reshape(B, S, KVH, G, D)
+    s = _gqa_scores_einsum(qh, k) / (D ** 0.5)
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (prefers big blocks)."""
+    d = min(n, target)
+    while n % d:
+        d -= 1
+    return d
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 1024, block_kv: int = 1024):
+    """Chunked (flash-style) attention in pure JAX: O(S*block) memory.
+
+    Same signature/semantics as `attention`; used for long sequences where
+    the S x T score matrix must never materialize. Online softmax over KV
+    blocks via lax.scan; query blocks via lax.map.
+    """
+    B, S, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    block_q = _pick_block(S, block_q)
+    block_kv = _pick_block(T, block_kv)
+    nq, nk = S // block_q, T // block_kv
+    qh = q.reshape(B, nq, block_q, KVH, G, D)
+    kb = k.reshape(B, nk, block_kv, KVH, D)
+    vb = v.reshape(B, nk, block_kv, KVH, D)
+    scale = 1.0 / (D ** 0.5)
+
+    def q_block(iq):
+        qi = qh[:, iq]  # [B, bq, KVH, G, D]
+        qpos = iq * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            ki, vi = kb[:, ik], vb[:, ik]
+            s = jnp.einsum("bskgd,btkd->bkgst", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ik * block_kv + jnp.arange(block_kv)
+            mask = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p.astype(qi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, block_q, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  jnp.arange(nk, dtype=jnp.int32))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        return o  # [B, KVH, G, bq, D]
+
+    o = lax.map(q_block, jnp.arange(nq, dtype=jnp.int32))  # [nq, B, KVH, G, bq, D]
+    o = jnp.moveaxis(o, 0, 1)  # [B, nq, KVH, G, bq, D]
+    o = jnp.transpose(o, (0, 1, 4, 2, 3, 5)).reshape(B, S, H, D)
+    return o.astype(q.dtype)
+
+
+def pick_attention(S: int, T: int, min_seq: int = 8193):
+    """Materializing attention below `min_seq` tokens, chunked flash above.
+
+    Baseline keeps dense attention at train lengths (<= 8K); the §Perf
+    hillclimb lowers `ArchConfig.flash_min_seq` to kill the S^2 buffers."""
+    return attention if max(S, T) < min_seq else flash_attention
+
+
+def qk_proj(h, w, H: int, hd: int):
+    """Attention projection for both weight layouts.
+
+    w 2D [D, H*hd] (flat baseline) or 3D [D, H, hd] (`attn_4d`: Megatron
+    layout — head/head_dim sharding survives because there is no reshape
+    across the shard boundary)."""
+    if w.ndim == 2:
+        return (h @ w).reshape(*h.shape[:-1], H, hd)
+    return jnp.einsum("...d,dhk->...hk", h, w,
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def out_proj(o, w):
+    """o [..., H, hd] x wo ([H*hd, D] flat | [H, hd, D] attn_4d) -> [..., D]."""
+    if w.ndim == 2:
+        return o.reshape(*o.shape[:-2], -1) @ w
+    return jnp.einsum("...hk,hkd->...d", o, w,
+                      preferred_element_type=jnp.float32).astype(o.dtype)
+
+
+def mlp(x, w1, w2, w3, kind: str):
+    """w1: [D,F] (gate/in), w2: [F,D] (out), w3: [D,F] (up; swiglu/geglu only)."""
+    dt = x.dtype
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ w1) * (x @ w3)
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ w1) * (x @ w3)
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ w1))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ w1)
+    else:
+        raise ValueError(kind)
+    return (h.astype(dt) @ w2).astype(dt)
+
+
+def mlp_n_mats(kind: str) -> int:
+    return 3 if kind in ("swiglu", "geglu") else 2
+
+
+def mask_padded_logits(logits, vocab: int):
+    """Vocab is padded (Megatron-style) for clean TP; mask the pad columns."""
+    vp = logits.shape[-1]
+    if vp == vocab:
+        return logits
+    col = jnp.arange(vp) < vocab
+    return jnp.where(col, logits, NEG_INF)
+
+
+def cross_entropy(logits, labels, ignore: int = -100):
+    """Mean token cross-entropy in fp32; `ignore` labels are masked."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore
+    lbl = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, logz - gold, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def init_dense(key, shape, dtype, scale: Optional[float] = None):
+    if any(s == 0 for s in shape):
+        return jnp.zeros(shape, dtype)
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(shapes, key):
+    """Materialize a {name: (shape, dtype)} pytree: norms ('ln*'/'scale*'/'a_param')
+    -> zeros; embeddings ('embed*') -> N(0, 0.02); else fan-in normal."""
+
+    def is_leaf(x):
+        return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=is_leaf)
+    flat, treedef = paths_leaves
+    keys = jax.random.split(key, max(len(flat), 1))
+    leaves = []
+    for k, (path, (shape, dt)) in zip(keys, flat):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if name.startswith(("ln", "scale", "norm")):
+            leaves.append(jnp.zeros(shape, dt))
+        elif name.startswith("embed"):
+            leaves.append(init_dense(k, shape, dt, scale=0.02))
+        else:
+            leaves.append(init_dense(k, shape, dt))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+def param_specs_as_sds(shapes):
+    """{name: (shape, dtype)} -> ShapeDtypeStruct pytree (dry-run params)."""
+
+    def is_leaf(x):
+        return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x[0], jnp.dtype(x[1])), shapes,
+        is_leaf=is_leaf)
+
+
+def activation_constraint(x, seq_over_model: bool = False):
+    """Pin the residual stream's sharding inside the layer scan.
+
+    Batch stays on the data axes (GSPMD otherwise trades batch sharding away
+    to avoid FSDP param gathers — measured 16x activation blow-up, SSPerf),
+    and optionally Megatron-SP shards the seq dim over 'model'.
+    No-op when no mesh is ambient (single-device tests)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh.empty or "model" not in mesh.axis_names:
+            return x
+        batch = tuple(a for a in mesh.axis_names if a != "model")
+        bsz = 1
+        for a in batch:
+            bsz *= mesh.shape[a]
+        if x.shape[0] % max(bsz, 1) != 0:
+            batch = ()
+        seq = ("model" if seq_over_model
+               and x.shape[1] % mesh.shape["model"] == 0 else None)
+        spec = P(batch if batch else None, seq, None)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def seq_shard_constraint(x):  # back-compat alias
+    return activation_constraint(x, seq_over_model=True)

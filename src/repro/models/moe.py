@@ -1,0 +1,259 @@
+"""Mixture-of-Experts LM family (olmoe 64e/top-8, qwen2-moe 60e/top-4 + shared).
+
+Token-choice top-k routing with capacity-bounded, *gather-based* dispatch:
+tokens are scattered into per-expert slot tables (int32 indices), experts run
+as one batched [E, C, D] x [E, D, F] einsum, and results gather back — no
+[tokens, E, C] one-hot dispatch tensors, so dispatch costs memory bandwidth
+rather than MXU flops. Dispatch runs in groups of `moe_group` tokens
+(scan-bounded memory). Expert weights shard over 'model' on the expert dim
+when divisible (olmoe: 64 % 16 == 0 -> true expert parallelism; qwen2's 60
+experts are not divisible, so its expert FF dim shards instead — see
+parallel/sharding.py), and GSPMD derives the token all-to-alls.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kvcache import paged
+from . import layers
+from .config import ArchConfig
+
+
+def capacity(cfg: ArchConfig) -> int:
+    c = math.ceil(cfg.moe_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8 * math.ceil(c / 8), 8)
+
+
+def param_shapes(cfg: ArchConfig):
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    E, Fe = cfg.padded_experts, cfg.expert_d_ff  # dummies never routed
+    dt = cfg.dtype
+    blocks = {
+        "ln1": ((L, D), dt),
+        "ln2": ((L, D), dt),
+        "wq": ((L, D, H, hd) if cfg.attn_4d else (L, D, H * hd), dt),
+        "wk": ((L, D, KVH, hd) if cfg.attn_4d else (L, D, KVH * hd), dt),
+        "wv": ((L, D, KVH, hd) if cfg.attn_4d else (L, D, KVH * hd), dt),
+        "wo": ((L, H, hd, D) if cfg.attn_4d else (L, H * hd, D), dt),
+        "wr": ((L, D, E), "float32"),       # router in fp32
+        "we1": ((L, E, D, Fe), dt),
+        "we2": ((L, E, Fe, D), dt),
+        "we3": ((L, E, D, Fe), dt),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * Fe
+        blocks.update({
+            "ws1": ((L, D, Fs), dt),
+            "ws2": ((L, Fs, D), dt),
+            "ws3": ((L, D, Fs), dt),
+        })
+    shapes = {"embed": ((V, D), dt), "blocks": blocks, "ln_f": ((D,), dt)}
+    if not cfg.tie_embeddings:
+        shapes["head"] = ((D, V), dt)
+    return shapes
+
+
+def init(cfg: ArchConfig, key):
+    return layers.init_params(param_shapes(cfg), key)
+
+
+def _moe_mlp(cfg: ArchConfig, h, lp):
+    """h [B, S, D] -> [B, S, D] routed through capacity-bounded experts."""
+    B, S, D = h.shape
+    E, K = cfg.padded_experts, cfg.top_k
+    N = B * S
+    # adapt the dispatch group to the actual token count (decode steps have
+    # ~B tokens; padding them to a full training group wastes memory 16x)
+    Gs = min(cfg.moe_group, max(8 * ((N + 7) // 8), 8))
+    C = max(8 * -(-int(Gs * K * cfg.capacity_factor / E) // 8), 8)
+    x = h.reshape(N, D)
+    # scan over a sharded dim serializes under GSPMD (measured: it
+    # all-gathered every group, SSPerf IT-B3). Process `m` groups per scan
+    # step with vmap so the group dim stays data-sharded; scan only the
+    # (unsharded) outer iteration dim.
+    m = max(min(cfg.moe_parallel_groups, -(-N // Gs)), 1)
+    pad = (-N) % (Gs * m)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n_iter = x.shape[0] // (Gs * m)
+    # m must be the OUTER (contiguous-major) dim so the data sharding of the
+    # token stream lands on it; scan then runs over the unsharded n_iter
+    xg = jnp.moveaxis(x.reshape(m, n_iter, Gs, D), 1, 0)
+
+    def _one_group(xg1):
+        logits = (xg1 @ lp["wr"].astype(xg1.dtype)).astype(jnp.float32)
+        if E != cfg.n_experts:  # mask padded (dummy) experts off the router
+            logits = jnp.where(jnp.arange(E) < cfg.n_experts, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)              # [Gs, E]
+        gates, idx = lax.top_k(probs, K)                     # [Gs, K]
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        # position of each (token, k) inside its expert (token-major order)
+        oh = jax.nn.one_hot(idx, E, dtype=jnp.int32)         # [Gs, K, E]
+        ohf = oh.reshape(Gs * K, E)
+        pos_excl = jnp.cumsum(ohf, axis=0) - ohf
+        pos = jnp.sum(pos_excl * ohf, axis=-1)               # [Gs*K]
+        keep = (pos < C) & (ohf.sum(-1) > 0)
+        # slot tables: token id per (expert, slot); -1 = empty
+        e_flat = idx.reshape(-1)
+        tok_flat = jnp.repeat(jnp.arange(Gs, dtype=jnp.int32), K)
+        slot_tok = jnp.full((E, C), -1, jnp.int32)
+        slot_tok = slot_tok.at[
+            jnp.where(keep, e_flat, E),   # out-of-bounds -> dropped
+            jnp.where(keep, pos, C),
+        ].set(tok_flat, mode="drop")
+        # gather tokens -> [E, C, D], run experts, gather back
+        x_e = xg1[jnp.maximum(slot_tok, 0)]
+        x_e = jnp.where((slot_tok >= 0)[..., None], x_e, 0)
+        h1 = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_e, lp["we1"],
+                                    preferred_element_type=jnp.float32))
+        h3 = jnp.einsum("ecd,edf->ecf", x_e, lp["we3"],
+                        preferred_element_type=jnp.float32)
+        y_e = jnp.einsum("ecf,efd->ecd", (h1 * h3).astype(x_e.dtype), lp["we2"],
+                         preferred_element_type=jnp.float32).astype(x_e.dtype)
+        # combine: y[g] = sum_k gate_k * y_e[idx_k, pos_k]
+        pos_k = pos.reshape(Gs, K)
+        keep_k = keep.reshape(Gs, K)
+        picked = y_e[idx, jnp.minimum(pos_k, C - 1)]          # [Gs, K, D]
+        w = jnp.where(keep_k, gates, 0.0).astype(picked.dtype)
+        return jnp.einsum("gkd,gk->gd", picked, w)
+
+    def per_iter(_, xgm):  # xgm [m, Gs, D], m groups in parallel (sharded)
+        return None, jax.vmap(_one_group)(xgm)
+
+    _, yg = lax.scan(per_iter, None, xg)
+    y = yg.reshape(-1, D)[:N].reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + layers.mlp(h, lp["ws1"], lp["ws2"], lp["ws3"], "swiglu")
+    return y.astype(h.dtype)
+
+
+def _block(cfg: ArchConfig, x, positions, lp):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = layers.rms_norm(x, lp["ln1"])
+    q = layers.qk_proj(h, lp["wq"], H, hd)
+    k = layers.qk_proj(h, lp["wk"], KVH, hd)
+    v = layers.qk_proj(h, lp["wv"], KVH, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    if cfg.gqa_expand and KVH != H:
+        k = jnp.repeat(k, H // KVH, axis=2)
+        v = jnp.repeat(v, H // KVH, axis=2)
+    attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+    o = attn(q, k, v, causal=True)
+    x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln2"])
+    return x + _moe_mlp(cfg, h2, lp)
+
+
+def forward(cfg: ArchConfig, params, tokens, positions=None):
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    blk = functools.partial(_block, cfg)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    def step(x, lp):
+        x = layers.activation_constraint(x, seq_over_model=cfg.seq_shard)
+        return blk(x, positions, lp), None
+
+    x, _ = lax.scan(step, x, params["blocks"])
+    return layers.rms_norm(x, params["ln_f"])
+
+
+def logits_fn(cfg, params, hidden):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return layers.mask_padded_logits(hidden @ head.astype(hidden.dtype),
+                                     cfg.vocab)
+
+
+def loss(cfg: ArchConfig, params, batch):
+    hidden = forward(cfg, params, batch["tokens"])
+    logits = logits_fn(cfg, params, hidden)
+    l = layers.cross_entropy(logits, batch["labels"])
+    return l, {"loss": l}
+
+
+# ----------------------------------------------------------------- serving --
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    return paged.cache_spec(
+        n_layers=cfg.n_layers, batch=batch, max_seq=max_seq,
+        page_size=cfg.page_size, kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        dtype=cfg.dtype,
+    )
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+        o = attn(q, k, v, causal=True)
+        x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + _moe_mlp(cfg, h2, lp)
+        k_pages = paged.write_prefill(k_pages, k, cache["page_table"])
+        v_pages = paged.write_prefill(v_pages, v, cache["page_table"])
+        return x, (k_pages, v_pages)
+
+    x, (k_pages, v_pages) = lax.scan(
+        step, x, (params["blocks"], cache["k_pages"], cache["v_pages"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, -1])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages,
+                 seq_lens=jnp.full((B,), S, jnp.int32))
+    return cache, logits
+
+
+def decode(cfg: ArchConfig, params, cache, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["seq_lens"]
+    x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]
+
+    def step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)[:, 0]
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)[:, 0]
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)[:, 0]
+        q = layers.rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = layers.rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        if cfg.kv_seq_parallel:
+            o, k_pages, v_pages = paged.write_attend_seqpar(
+                q, k, v, k_pages, v_pages, cache["page_table"], pos)
+        else:
+            k_pages = paged.write_token(k_pages, k, cache["page_table"], pos)
+            v_pages = paged.write_token(v_pages, v, cache["page_table"], pos)
+            o = paged.attend(q, k_pages, v_pages, cache["page_table"], pos + 1)
+        x = x + layers.out_proj(o[:, None], lp["wo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + _moe_mlp(cfg, h2, lp)
+        return x, (k_pages, v_pages)
+
+    x, (k_pages, v_pages) = lax.scan(
+        step, x, (params["blocks"], cache["k_pages"], cache["v_pages"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, 0])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages, seq_lens=pos + 1)
+    return cache, logits

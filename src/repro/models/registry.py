@@ -1,0 +1,99 @@
+"""Family dispatch + per-(arch x shape) input specs for train/prefill/decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, moe, ssm, transformer, vlm
+from .config import ArchConfig, ShapeConfig
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "audio": encdec,
+    "moe": moe,
+    "vlm": vlm,
+}
+
+
+def get_module(cfg: ArchConfig):
+    return FAMILY_MODULES[cfg.family]
+
+
+def init(cfg: ArchConfig, key):
+    return get_module(cfg).init(cfg, key)
+
+
+def param_sds(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation; dry-run)."""
+    from . import layers
+    return layers.param_specs_as_sds(get_module(cfg).param_shapes(cfg))
+
+
+def loss_fn(cfg: ArchConfig):
+    mod = get_module(cfg)
+    return lambda params, batch: mod.loss(cfg, params, batch)
+
+
+# --------------------------------------------------------------- input specs
+def _text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """VLM text length excludes the patch prefix (total positions = seq_len)."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for one global training batch."""
+    B, S = shape.global_batch, _text_len(cfg, shape.seq_len)
+    sds = jax.ShapeDtypeStruct
+    spec = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        spec["enc_embeds"] = sds((B, cfg.enc_frames, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    return spec
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(batch_spec, cache_spec) for a prefill step over the full seq_len."""
+    B, S = shape.global_batch, _text_len(cfg, shape.seq_len)
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = sds((B, cfg.enc_frames, cfg.d_model),
+                                  jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    cache = get_module(cfg).cache_spec(cfg, B, shape.seq_len)
+    return batch, cache
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(batch_spec, cache_spec) for one decode step with a seq_len-deep cache."""
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    batch = {"tokens": sds((B, 1), jnp.int32)}
+    cache = get_module(cfg).cache_spec(cfg, B, shape.seq_len)
+    return batch, cache
+
+
+def make_train_batch(cfg: ArchConfig, shape: ShapeConfig, key,
+                     global_batch: int | None = None):
+    """Materialized synthetic batch (smoke tests / examples)."""
+    B = global_batch or shape.global_batch
+    S = _text_len(cfg, shape.seq_len)
+    ks = jax.random.split(key, 3)
+    toks = jax.random.randint(ks[0], (B, S), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.enc_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch

@@ -1,0 +1,277 @@
+"""Mamba-2 / SSD (state-space duality) family — attention-free LM.
+
+Train/prefill use the *chunked* SSD algorithm (quadratic within chunks,
+linear scan across chunks) so the MXU sees real matmuls; decode is the O(1)
+recurrent update h' = exp(dt*A) h + dt * (B ⊗ x). The SSM state is constant
+size, so `long_500k` decode is runnable (sub-quadratic); there is no KV
+cache to page — see DESIGN.md §Arch-applicability for how the allocator is
+(not) used here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers
+from .config import ArchConfig
+
+
+def dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N  # x, B, C go through the causal conv
+    return d_inner, H, N, conv_dim
+
+
+def param_shapes(cfg: ArchConfig):
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    d_inner, H, N, conv_dim = dims(cfg)
+    dt = cfg.dtype
+    blocks = {
+        "ln": ((L, D), dt),
+        # separate projections (vs the fused in_proj) so every output dim is
+        # TP-divisible: z/x are d_inner (pow2), B/C are N, dt stays replicated
+        "wz": ((L, D, d_inner), dt),
+        "wxi": ((L, D, d_inner), dt),
+        "wb": ((L, D, N), dt),
+        "wc": ((L, D, N), dt),
+        "wdt": ((L, D, H), dt),
+        "conv_w": ((L, cfg.conv_width, conv_dim), dt),
+        "conv_b": ((L, conv_dim), dt),
+        "a_log": ((L, H), "float32"),
+        "d_skip": ((L, H), "float32"),
+        "dt_bias": ((L, H), "float32"),
+        "ln_y": ((L, d_inner), dt),
+        "out_proj": ((L, d_inner, D), dt),
+    }
+    return {"embed": ((V, D), dt), "blocks": blocks, "ln_f": ((D,), dt)}
+
+
+def init(cfg: ArchConfig, key):
+    p = layers.init_params(param_shapes(cfg), key)
+    # A in (-1, 0): a_log init ~ log(uniform[1,16]); dt_bias ~ softplus^-1(0.01)
+    L = cfg.n_layers
+    _, H, _, _ = dims(cfg)
+    p["blocks"]["a_log"] = jnp.log(
+        jnp.linspace(1.0, 16.0, H, dtype=jnp.float32))[None].repeat(L, 0)
+    p["blocks"]["dt_bias"] = jnp.full((L, H), -4.6, jnp.float32)
+    return p
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x [B,S,C]; w [W,C]; state [B,W-1,C] or None.
+
+    Returns (y [B,S,C], new_state [B,W-1,C])."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    y = jax.nn.silu(y + b[None, None, :])
+    return y.astype(x.dtype), xp[:, -(W - 1):, :]
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """Chunked SSD. x [b,s,h,p]; dt [b,s,h] (>0); A [h] (<0); B_,C_ [b,s,n].
+
+    Returns y [b,s,h,p] and the final state [b,h,p,n]."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    s_orig = s
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 steps contribute nothing to the state; outputs are sliced off
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B_.reshape(b, nc, chunk, n)
+    Cc = C_.reshape(b, nc, chunk, n)
+
+    dA = dtc * A  # [b,nc,l,h], negative
+    cum = jnp.cumsum(dA, axis=2)  # inclusive within-chunk cumsum
+
+    # intra-chunk (quadratic in chunk length)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [b,nc,i,j,h]
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    W = scores[..., None] * decay * dtc[:, :, None, :, :]
+    W = jnp.where(causal, W, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(jnp.float32))
+
+    # chunk-final states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [b,nc,j,h]
+    Sc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_end * dtc, Bc,
+                    xc.astype(jnp.float32))
+
+    # inter-chunk linear recurrence: H_c = exp(sum dA_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [b,nc,h]
+
+    def step(Hprev, xs):
+        cd, Sc_ = xs  # [b,h], [b,h,p,n]
+        Hnew = Hprev * cd[:, :, None, None] + Sc_
+        return Hnew, Hprev
+
+    H0 = jnp.zeros((b, h, p, n), jnp.float32)
+    Hfin, Hprevs = lax.scan(step, H0, (jnp.moveaxis(chunk_decay, 1, 0),
+                                       jnp.moveaxis(Sc, 1, 0)))
+    Hprevs = jnp.moveaxis(Hprevs, 0, 1)  # [b,nc,h,p,n] state at chunk starts
+
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, Hprevs) * jnp.exp(
+        cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), Hfin
+
+
+def ssd_recurrent_step(state, x, dt, A, B_, C_):
+    """One-token SSD update. state [B,h,p,n]; x [B,h,p]; dt [B,h]; B_,C_ [B,n]."""
+    dt = dt.astype(jnp.float32)
+    dA = jnp.exp(dt * A)  # [B,h]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, B_, x.astype(jnp.float32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_, state)
+    return state, y.astype(x.dtype)
+
+
+def _proj(lp, h):
+    return (h @ lp["wz"], h @ lp["wxi"], h @ lp["wb"], h @ lp["wc"],
+            h @ lp["wdt"])
+
+
+def _block_train(cfg: ArchConfig, x, lp):
+    B, S, D = x.shape
+    d_inner, H, N, conv_dim = dims(cfg)
+    h = layers.rms_norm(x, lp["ln"])
+    z, xs, B_, C_, dtp = _proj(lp, h)
+    conv_in = jnp.concatenate([xs, B_, C_], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"])
+    xs, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["a_log"])
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    y, _ = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk)
+    y = y + lp["d_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_inner)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        lp["ln_y"])
+    return x + (y @ lp["out_proj"]).astype(x.dtype)
+
+
+def forward(cfg: ArchConfig, params, tokens, positions=None):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    blk = functools.partial(_block_train, cfg)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    def step(x, lp):
+        x = layers.activation_constraint(x, seq_over_model=cfg.seq_shard)
+        return blk(x, lp), None
+
+    x, _ = lax.scan(step, x, params["blocks"])
+    return layers.rms_norm(x, params["ln_f"])
+
+
+def logits_fn(cfg: ArchConfig, params, hidden):
+    return layers.mask_padded_logits(
+        hidden @ params["embed"].T.astype(hidden.dtype), cfg.vocab)  # tied
+
+
+def loss(cfg: ArchConfig, params, batch):
+    hidden = forward(cfg, params, batch["tokens"])
+    logits = logits_fn(cfg, params, hidden)
+    l = layers.cross_entropy(logits, batch["labels"])
+    return l, {"loss": l}
+
+
+# ----------------------------------------------------------------- serving --
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    d_inner, H, N, conv_dim = dims(cfg)
+    L, W = cfg.n_layers, cfg.conv_width
+    sds = jax.ShapeDtypeStruct
+    return {
+        "ssm_state": sds((L, batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv_state": sds((L, batch, W - 1, conv_dim), jnp.dtype(cfg.dtype)),
+        "seq_lens": sds((batch,), jnp.int32),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, max_seq))
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    """Forward + capture final SSM/conv states for decode."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    d_inner, H, N, conv_dim = dims(cfg)
+    x = params["embed"][tokens].astype(cfg.dtype)
+
+    def step(x, xs):
+        lp, _, _ = xs
+        h = layers.rms_norm(x, lp["ln"])
+        z, xs_, B_, C_, dtp = _proj(lp, h)
+        conv_in = jnp.concatenate([xs_, B_, C_], axis=-1)
+        conv_out, conv_state = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"])
+        xs_, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+        dt = jax.nn.softplus(dtp.astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["a_log"])
+        xh = xs_.reshape(B, S, H, cfg.ssm_head_dim)
+        y, ssm_state = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk)
+        y = y + lp["d_skip"][None, None, :, None].astype(y.dtype) * xh
+        y = y.reshape(B, S, d_inner)
+        y = layers.rms_norm(
+            y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), lp["ln_y"])
+        return x + (y @ lp["out_proj"]).astype(x.dtype), (ssm_state, conv_state)
+
+    x, (ssm_state, conv_state) = lax.scan(
+        step, x, (params["blocks"], cache["ssm_state"], cache["conv_state"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, -1])
+    cache = dict(cache, ssm_state=ssm_state, conv_state=conv_state,
+                 seq_lens=jnp.full((B,), S, jnp.int32))
+    return cache, logits
+
+
+def decode(cfg: ArchConfig, params, cache, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    d_inner, H, N, conv_dim = dims(cfg)
+    x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]
+
+    def step(x, xs):
+        lp, ssm_state, conv_state = xs
+        h = layers.rms_norm(x, lp["ln"])
+        z, xs_, B_, C_, dtp = _proj(lp, h)
+        conv_in = jnp.concatenate([xs_, B_, C_], axis=-1)
+        conv_out, conv_state = _causal_conv(conv_in, lp["conv_w"], lp["conv_b"],
+                                            state=conv_state)
+        xs_, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+        dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + lp["dt_bias"])
+        A = -jnp.exp(lp["a_log"])
+        xh = xs_[:, 0].reshape(B, H, cfg.ssm_head_dim)
+        ssm_state, y = ssd_recurrent_step(ssm_state, xh, dt, A, B_[:, 0], C_[:, 0])
+        y = y + lp["d_skip"][None, :, None].astype(y.dtype) * xh
+        y = y.reshape(B, 1, d_inner)
+        y = layers.rms_norm(
+            y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), lp["ln_y"])
+        return x + (y @ lp["out_proj"]).astype(x.dtype), (ssm_state, conv_state)
+
+    x, (ssm_state, conv_state) = lax.scan(
+        step, x, (params["blocks"], cache["ssm_state"], cache["conv_state"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, 0])
+    cache = dict(cache, ssm_state=ssm_state, conv_state=conv_state,
+                 seq_lens=cache["seq_lens"] + 1)
+    return cache, logits

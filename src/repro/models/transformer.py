@@ -1,0 +1,188 @@
+"""Dense GQA transformer LM (nemotron / stablelm / mistral / granite).
+
+Parameters are stacked over layers and the forward pass is a `lax.scan` —
+compact HLO, remat-friendly, fast SPMD compiles. Decode uses the paged KV
+cache managed by PIM-malloc (`repro.kvcache`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kvcache import paged
+from . import layers
+from .config import ArchConfig
+
+
+def param_shapes(cfg: ArchConfig):
+    L, D, V, F = cfg.n_layers, cfg.d_model, cfg.padded_vocab, cfg.d_ff
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    blocks = {
+        "ln1": ((L, D), dt),
+        "ln2": ((L, D), dt),
+        "wq": ((L, D, H, hd) if cfg.attn_4d else (L, D, H * hd), dt),
+        "wk": ((L, D, KVH, hd) if cfg.attn_4d else (L, D, KVH * hd), dt),
+        "wv": ((L, D, KVH, hd) if cfg.attn_4d else (L, D, KVH * hd), dt),
+        "wo": ((L, H, hd, D) if cfg.attn_4d else (L, H * hd, D), dt),
+        "w1": ((L, D, F), dt),
+        "w2": ((L, F, D), dt),
+    }
+    if layers.mlp_n_mats(cfg.mlp) == 3:
+        blocks["w3"] = ((L, D, F), dt)
+    shapes = {"embed": ((V, D), dt), "blocks": blocks, "ln_f": ((D,), dt)}
+    if not cfg.tie_embeddings:
+        shapes["head"] = ((D, V), dt)
+    return shapes
+
+
+def init(cfg: ArchConfig, key):
+    return layers.init_params(param_shapes(cfg), key)
+
+
+def _block(cfg: ArchConfig, x, positions, lp, *, window: int = 0):
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.seq_shard:
+        # Megatron-SP: the residual is seq-sharded BETWEEN blocks (small
+        # remat carries); gather the seq dim here so the TP matmuls see
+        # whole sequences — otherwise GSPMD all-gathers the WEIGHTS every
+        # layer x microbatch (measured: 1.4 GB x 704 on mistral, SSPerf).
+        x = layers.activation_constraint(x, seq_over_model=False)
+    h = layers.rms_norm(x, lp["ln1"])
+    q = layers.qk_proj(h, lp["wq"], H, hd)
+    k = layers.qk_proj(h, lp["wk"], KVH, hd)
+    v = layers.qk_proj(h, lp["wv"], KVH, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    if cfg.gqa_expand and KVH != H:
+        k = jnp.repeat(k, H // KVH, axis=2)
+        v = jnp.repeat(v, H // KVH, axis=2)
+    attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+    o = attn(q, k, v, causal=True, window=window)
+    x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+    h2 = layers.rms_norm(x, lp["ln2"])
+    x = x + layers.mlp(h2, lp["w1"], lp["w2"], lp.get("w3"), cfg.mlp)
+    return x
+
+
+def forward_embeds(cfg: ArchConfig, params, x, positions):
+    """x [B, S, D] input embeddings -> final hidden [B, S, D]."""
+    blk = functools.partial(_block, cfg)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    def step(x, lp):
+        x = layers.activation_constraint(x, seq_over_model=cfg.seq_shard)
+        return blk(x, positions, lp), None
+
+    x, _ = lax.scan(step, x, params["blocks"])
+    return layers.rms_norm(x, params["ln_f"])
+
+
+def forward(cfg: ArchConfig, params, tokens, positions=None):
+    """tokens [B, S] -> final hidden [B, S, D]."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    return forward_embeds(cfg, params, x, positions)
+
+
+def logits_fn(cfg: ArchConfig, params, hidden):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return layers.mask_padded_logits(hidden @ head.astype(hidden.dtype),
+                                     cfg.vocab)
+
+
+def loss(cfg: ArchConfig, params, batch):
+    hidden = forward(cfg, params, batch["tokens"])
+    logits = logits_fn(cfg, params, hidden)
+    l = layers.cross_entropy(logits, batch["labels"])
+    return l, {"loss": l}
+
+
+# ----------------------------------------------------------------- serving --
+def cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    return paged.cache_spec(
+        n_layers=cfg.n_layers, batch=batch, max_seq=max_seq,
+        page_size=cfg.page_size, kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        dtype=cfg.dtype,
+    )
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    """Full-sequence forward that also writes the paged KV cache.
+
+    Returns (cache, logits_last [B, V])."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        attn = layers.pick_attention(S, S, cfg.flash_min_seq)
+        o = attn(q, k, v, causal=True)
+        x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + layers.mlp(h2, lp["w1"], lp["w2"], lp.get("w3"), cfg.mlp)
+        k_pages = paged.write_prefill(k_pages, k, cache["page_table"])
+        v_pages = paged.write_prefill(v_pages, v, cache["page_table"])
+        return x, (k_pages, v_pages)
+
+    x, (k_pages, v_pages) = lax.scan(
+        step, x, (params["blocks"], cache["k_pages"], cache["v_pages"])
+    )
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, -1])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages,
+                 seq_lens=jnp.full((B,), S, jnp.int32))
+    return cache, logits
+
+
+def decode(cfg: ArchConfig, params, cache, batch):
+    """One decode step: tokens [B, 1] -> (cache, logits [B, V])."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["seq_lens"]  # [B] position of the new token
+    x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]  # [B,1,D]
+
+    def step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)[:, 0]
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)[:, 0]
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)[:, 0]
+        q = layers.rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = layers.rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        if cfg.kv_seq_parallel:
+            o, k_pages, v_pages = paged.write_attend_seqpar(
+                q, k, v, k_pages, v_pages, cache["page_table"], pos)
+        else:
+            k_pages = paged.write_token(k_pages, k, cache["page_table"], pos)
+            v_pages = paged.write_token(v_pages, v, cache["page_table"], pos)
+            o = paged.attend(q, k_pages, v_pages, cache["page_table"], pos + 1)
+        x = x + layers.out_proj(o[:, None], lp["wo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + layers.mlp(h2, lp["w1"], lp["w2"], lp.get("w3"), cfg.mlp)
+        return x, (k_pages, v_pages)
+
+    x, (k_pages, v_pages) = lax.scan(
+        step, x, (params["blocks"], cache["k_pages"], cache["v_pages"])
+    )
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, 0])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages, seq_lens=pos + 1)
+    return cache, logits

@@ -1,0 +1,88 @@
+"""PaliGemma-style VLM: SigLIP patch-embedding STUB + gemma decoder (MQA).
+
+Per the assignment the modality frontend is a stub: `input_specs()` supplies
+precomputed patch embeddings [B, n_patches, D] which are prepended to the
+text embeddings; the backbone is the dense transformer (kv=1 MQA, GeGLU).
+Deviation noted in DESIGN.md: attention is fully causal (PaliGemma uses
+bidirectional attention over the image+prompt prefix).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache import paged
+from . import layers, transformer
+from .config import ArchConfig
+
+param_shapes = transformer.param_shapes
+init = transformer.init
+logits_fn = transformer.logits_fn
+cache_spec = transformer.cache_spec
+
+
+def forward(cfg: ArchConfig, params, tokens, patch_embeds):
+    """tokens [B, S_text]; patch_embeds [B, n_patches, D] -> hidden (full seq)."""
+    B, S = tokens.shape
+    P = patch_embeds.shape[1]
+    x_txt = params["embed"][tokens].astype(cfg.dtype)
+    x = jnp.concatenate([patch_embeds.astype(cfg.dtype), x_txt], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(P + S), (B, P + S))
+    return transformer.forward_embeds(cfg, params, x, positions)
+
+
+def loss(cfg: ArchConfig, params, batch):
+    tokens, labels = batch["tokens"], batch["labels"]
+    P = batch["patch_embeds"].shape[1]
+    hidden = forward(cfg, params, tokens, batch["patch_embeds"])
+    # text token s sits at position P + s; logits at P + s - 1 predict it
+    S = tokens.shape[1]
+    hs = hidden[:, P - 1: P + S - 1]
+    logits = logits_fn(cfg, params, hs)
+    l = layers.cross_entropy(logits, labels)
+    return l, {"loss": l}
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    """Image + prompt prefill. The patch prefix occupies the first pages."""
+    tokens = batch["tokens"]
+    patch_embeds = batch["patch_embeds"]
+    B, S = tokens.shape
+    P = patch_embeds.shape[1]
+    assert (P + S) % cfg.page_size == 0, (P, S, cfg.page_size)
+    x_txt = params["embed"][tokens].astype(cfg.dtype)
+    x = jnp.concatenate([patch_embeds.astype(cfg.dtype), x_txt], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(P + S), (B, P + S))
+
+    import functools
+    from jax import lax
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Sfull = P + S
+
+    def step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = layers.rms_norm(x, lp["ln1"])
+        q = layers.qk_proj(h, lp["wq"], H, hd)
+        k = layers.qk_proj(h, lp["wk"], KVH, hd)
+        v = layers.qk_proj(h, lp["wv"], KVH, hd)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        attn = layers.pick_attention(Sfull, Sfull, cfg.flash_min_seq)
+        o = attn(q, k, v, causal=True)
+        x = x + layers.out_proj(o, lp["wo"]).astype(x.dtype)
+        h2 = layers.rms_norm(x, lp["ln2"])
+        x = x + layers.mlp(h2, lp["w1"], lp["w2"], lp.get("w3"), cfg.mlp)
+        k_pages = paged.write_prefill(k_pages, k, cache["page_table"])
+        v_pages = paged.write_prefill(v_pages, v, cache["page_table"])
+        return x, (k_pages, v_pages)
+
+    x, (k_pages, v_pages) = lax.scan(
+        step, x, (params["blocks"], cache["k_pages"], cache["v_pages"]))
+    x = layers.rms_norm(x, params["ln_f"])
+    logits = logits_fn(cfg, params, x[:, -1])
+    cache = dict(cache, k_pages=k_pages, v_pages=v_pages,
+                 seq_lens=jnp.full((B,), Sfull, jnp.int32))
+    return cache, logits
+
+
+decode = transformer.decode  # post-prefill decode is identical to dense

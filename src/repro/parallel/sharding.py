@@ -1,0 +1,195 @@
+"""Sharding rules: param/optimizer/cache/batch PartitionSpecs per mesh.
+
+Conventions (divisibility-aware — falls back per dimension):
+  * batch/sequence data shard over all non-'model' axes ('pod','data').
+  * Megatron TP: qkv/up projections shard their output dim over 'model';
+    out/down projections shard their input dim.
+  * FSDP (>= ~8B params): every 2D+ weight additionally shards its largest
+    remaining dim over 'data' — optimizer state inherits param specs, so
+    ZeRO-3 falls out for free.
+  * MoE experts shard the expert dim over 'model' when divisible (olmoe:
+    64 % 16 == 0), else the expert-FF dim (qwen2: 60 experts).
+  * KV pools: batch dim over ('pod','data') — pools, page tables, and
+    allocator state live with their sequences (PIM-Metadata/PIM-Executed);
+    KV heads over 'model' when divisible, else head_dim.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh, dim: int, axes):
+    """axes if dim divisible by their product else None."""
+    return axes if dim % _axsize(mesh, axes) == 0 else None
+
+
+# --------------------------------------------------------------------- params
+_COL = ("wq", "wk", "wv", "w1", "w3", "m1", "m3", "ws1", "ws3", "in_proj",
+        "wx", "wy", "wz", "wb", "wc", "wdt", "w_r", "w_i", "xwq", "xwk",
+        "xwv")   # shard LAST dim (wxi matches "wx")
+_ROW = ("wo", "w2", "m2", "ws2", "out_proj", "w_out", "xwo")  # shard dim -2
+_REPL = ("ln", "scale", "norm", "a_param", "a_log", "dt_bias", "d_skip",
+         "conv_w", "conv_b")
+
+
+def _param_spec(mesh: Mesh, name: str, shape, fsdp: bool):
+    nd = len(shape)
+    spec = [None] * nd
+    if name.startswith(_REPL) or nd <= 1:
+        return P(*spec)
+    if name.startswith("embed"):
+        if shape[0] % _axsize(mesh, "model") == 0:
+            spec[0] = "model"
+        elif shape[1] % _axsize(mesh, "model") == 0:
+            spec[1] = "model"
+        if fsdp:
+            free = 1 if spec[0] == "model" else 0
+            if spec[free] is None and shape[free] % _axsize(mesh, "data") == 0:
+                spec[free] = "data"
+        return P(*spec)
+    if name == "head":  # [D, V]
+        spec[-1] = _maybe(mesh, shape[-1], "model")
+        if fsdp and spec[-1] is not None:
+            spec[0] = _maybe(mesh, shape[0], "data")
+        return P(*spec)
+    if name in ("we1", "we3"):       # [L, E, D, Fe]
+        if shape[1] % _axsize(mesh, "model") == 0:
+            spec[1] = "model"
+        else:
+            spec[3] = _maybe(mesh, shape[3], "model")
+        if fsdp:
+            spec[2] = _maybe(mesh, shape[2], "data")
+        return P(*spec)
+    if name == "we2":                # [L, E, Fe, D]
+        if shape[1] % _axsize(mesh, "model") == 0:
+            spec[1] = "model"
+        else:
+            spec[2] = _maybe(mesh, shape[2], "model")
+        if fsdp:
+            spec[3] = _maybe(mesh, shape[3], "data")
+        return P(*spec)
+    if name == "wr":                 # [L, D, E] router
+        spec[1] = _maybe(mesh, shape[1], "data") if fsdp else None
+        spec[2] = _maybe(mesh, shape[2], "model")
+        return P(*spec)
+    if name in ("wq", "wk", "wv", "xwq", "xwk", "xwv") and nd == 4:
+        # attn_4d Megatron layout [L, D, H, hd]: shard the HEAD dim over
+        # 'model' when divisible, else REPLICATE. Never shard head_dim:
+        # sharding the attention contraction makes GSPMD emit partial-sum
+        # all-reduces of S^2-sized scores (measured regression, SSPerf IT1).
+        h_s = _maybe(mesh, shape[2], "model")
+        if fsdp:
+            spec[1] = _maybe(mesh, shape[1], "data")
+        spec[2] = h_s
+        return P(*spec)
+    if name in ("wo", "xwo") and nd == 4:     # [L, H, hd, D]
+        h_s = _maybe(mesh, shape[1], "model")
+        if fsdp:
+            spec[3] = _maybe(mesh, shape[3], "data")
+        spec[1] = h_s
+        return P(*spec)
+    if name.startswith(_COL):
+        spec[-1] = _maybe(mesh, shape[-1], "model")
+        if fsdp:
+            spec[-2] = _maybe(mesh, shape[-2], "data")
+        return P(*spec)
+    if name.startswith(_ROW):
+        spec[-2] = _maybe(mesh, shape[-2], "model")
+        if fsdp:
+            spec[-1] = _maybe(mesh, shape[-1], "data")
+        return P(*spec)
+    # default: try model on last dim
+    spec[-1] = _maybe(mesh, shape[-1], "model")
+    return P(*spec)
+
+
+def param_specs(mesh: Mesh, shapes_sds, fsdp: bool = False):
+    """ShapeDtypeStruct pytree -> PartitionSpec pytree (by leaf name)."""
+
+    def walk(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        return _param_spec(mesh, name, leaf.shape, fsdp)
+
+    return jax.tree_util.tree_map_with_path(walk, shapes_sds)
+
+
+# ------------------------------------------------------------- batch & cache
+def _dp_if_div(mesh: Mesh, dim: int):
+    """Largest prefix of the dp axes that divides `dim` (b=1 -> replicate)."""
+    dp = dp_axes(mesh)
+    while dp and dim % _axsize(mesh, dp) != 0:
+        dp = dp[1:]
+    return dp if dp else None
+
+
+def batch_specs(mesh: Mesh, batch_sds):
+    return jax.tree.map(
+        lambda s: P(_dp_if_div(mesh, s.shape[0]),
+                    *([None] * (len(s.shape) - 1))), batch_sds)
+
+
+def _kv_tail_spec(mesh, kvh: int, seq: int):
+    """(KVH, seq) preference: KV heads over 'model' when divisible (fully
+    local attention per head), else the sequence/page dim (sequence-parallel
+    decode: GSPMD reduces the sharded-softmax to tiny stat all-reduces
+    instead of gathering KV — see EXPERIMENTS.md SSPerf). Never shard
+    head_dim: contraction sharding made GSPMD gather whole KV tensors."""
+    if kvh % _axsize(mesh, "model") == 0:
+        return "model", None
+    if seq % _axsize(mesh, "model") == 0:
+        return None, "model"
+    return None, None
+
+
+def cache_specs(mesh: Mesh, cache_sds):
+    out = {}
+    for name, s in cache_sds.items():
+        shape = s.shape
+        if name in ("k_pages", "v_pages"):   # [L, B, P, page, KVH, hd]
+            dp = _dp_if_div(mesh, shape[1])
+            kvh_s, seq_s = _kv_tail_spec(mesh, shape[4], shape[2])
+            out[name] = P(None, dp, seq_s, None, kvh_s, None)
+        elif name in ("win_k", "win_v"):     # [G, B, win, KVH, hd]
+            dp = _dp_if_div(mesh, shape[1])
+            kvh_s, seq_s = _kv_tail_spec(mesh, shape[3], shape[2])
+            out[name] = P(None, dp, seq_s, kvh_s, None)
+        elif name in ("enc_k", "enc_v"):     # [L, B, T, KVH, hd]
+            dp = _dp_if_div(mesh, shape[1])
+            kvh_s, seq_s = _kv_tail_spec(mesh, shape[3], shape[2])
+            out[name] = P(None, dp, seq_s, kvh_s, None)
+        elif name == "ssm_state":            # [L, B, H, p, N]
+            dp = _dp_if_div(mesh, shape[1])
+            h_s = _maybe(mesh, shape[2], "model")
+            out[name] = P(None, dp, h_s, None, None)
+        elif name == "conv_state":           # [L, B, W-1, C]
+            dp = _dp_if_div(mesh, shape[1])
+            out[name] = P(None, dp, None, _maybe(mesh, shape[3], "model"))
+        elif name == "rg_state":             # [n_rec, B, D]
+            dp = _dp_if_div(mesh, shape[1])
+            out[name] = P(None, dp, _maybe(mesh, shape[2], "model"))
+        elif name in ("page_table", "seq_lens"):
+            dp = _dp_if_div(mesh, shape[0])
+            out[name] = P(*([dp] + [None] * (len(shape) - 1)))
+        else:
+            out[name] = P(*([None] * len(shape)))
+    return out
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,132 @@
+"""Unit + property tests for the tensorized buddy allocator."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buddy
+from repro.core.oracle import PyBuddy
+
+CFG = buddy.BuddyConfig(heap_bytes=1 << 14, min_block=32)
+
+
+@pytest.fixture(scope="module")
+def ops():
+    return (
+        jax.jit(lambda s, z: buddy.alloc(CFG, s, z)),
+        jax.jit(lambda s, o, z: buddy.free(CFG, s, o, z)),
+    )
+
+
+def test_init_longest():
+    st_ = buddy.init(CFG)
+    assert int(st_.longest[1]) == CFG.heap_bytes
+    assert int(st_.longest[2]) == CFG.heap_bytes // 2
+    assert int(st_.longest[CFG.n_nodes - 1]) == CFG.min_block
+
+
+def test_alloc_whole_heap(ops):
+    alloc, free = ops
+    st_ = buddy.init(CFG)
+    st_, off, ev = alloc(st_, jnp.int32(CFG.heap_bytes))
+    assert int(off) == 0 and bool(ev.ok)
+    assert int(st_.longest[1]) == 0
+    st_, off2, ev2 = alloc(st_, jnp.int32(32))
+    assert int(off2) == -1 and not bool(ev2.ok)
+    st_, fev = free(st_, jnp.int32(0), jnp.int32(CFG.heap_bytes))
+    assert bool(fev.ok)
+    assert int(st_.longest[1]) == CFG.heap_bytes
+
+
+def test_alignment_and_rounding(ops):
+    alloc, _ = ops
+    st_ = buddy.init(CFG)
+    for req in (1, 31, 33, 100, 1000):
+        st_, off, ev = alloc(st_, jnp.int32(req))
+        size = max(1 << (req - 1).bit_length(), CFG.min_block)
+        assert int(off) % size == 0, (req, int(off))
+
+
+def test_split_merge_roundtrip(ops):
+    alloc, free = ops
+    st_ = buddy.init(CFG)
+    offs = []
+    for _ in range(4):
+        st_, off, _ = alloc(st_, jnp.int32(4096))
+        offs.append(int(off))
+    assert offs == [0, 4096, 8192, 12288]
+    assert int(buddy.free_bytes(CFG, st_)) == 0
+    for off in offs:
+        st_, _ = free(st_, jnp.int32(off), jnp.int32(4096))
+    assert int(st_.longest[1]) == CFG.heap_bytes  # fully merged back
+
+
+def test_trace_shape_and_levels(ops):
+    alloc, _ = ops
+    st_ = buddy.init(CFG)
+    st_, off, ev = alloc(st_, jnp.int32(32))
+    # depth = log2(16K/32) = 9 levels down for the smallest block
+    assert int(ev.levels_down) == CFG.depth
+    assert ev.trace.shape == (CFG.trace_len,)
+    tr = [int(x) for x in ev.trace if int(x) >= 0]
+    assert tr[0] == 1 and len(tr) == 1 + CFG.depth + CFG.depth
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 99), min_size=1, max_size=60), st.randoms())
+def test_property_matches_oracle(seq, rnd):
+    """Random alloc/free interleavings match the Python oracle exactly."""
+    cfg = buddy.BuddyConfig(heap_bytes=1 << 12, min_block=32)
+    st_ = buddy.init(cfg)
+    py = PyBuddy(1 << 12, 32)
+    alloc = jax.jit(lambda s, z: buddy.alloc(cfg, s, z))
+    free = jax.jit(lambda s, o, z: buddy.free(cfg, s, o, z))
+    live = []
+    for v in seq:
+        if live and v % 2 == 0:
+            off, size = live.pop(rnd.randrange(len(live)))
+            st_, ev = free(st_, jnp.int32(off), jnp.int32(size))
+            assert py.free(off, size) == bool(ev.ok)
+        else:
+            size = [16, 32, 64, 100, 256, 512, 1024][v % 7]
+            st_, off, _ = alloc(st_, jnp.int32(size))
+            assert int(off) == py.alloc(size)
+            if int(off) >= 0:
+                live.append((int(off), size))
+    assert py.longest == [int(x) for x in st_.longest]
+    assert int(buddy.free_bytes(cfg, st_)) == py.free_bytes()
+
+
+def test_no_overlap_invariant(ops):
+    """Live blocks never overlap (checked via interval arithmetic)."""
+    alloc, free = ops
+    st_ = buddy.init(CFG)
+    live = []
+    import random
+
+    rng = random.Random(7)
+    for _ in range(80):
+        if live and rng.random() < 0.4:
+            off, size = live.pop(rng.randrange(len(live)))
+            st_, _ = free(st_, jnp.int32(off), jnp.int32(size))
+        else:
+            size = rng.choice([32, 64, 128, 512, 2048])
+            st_, off, _ = alloc(st_, jnp.int32(size))
+            if int(off) >= 0:
+                live.append((int(off), size))
+        ivs = sorted((o, o + max(s, 32)) for o, s in live)
+        for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+            assert a1 <= b0, ivs
+
+
+def test_vmap_over_cores():
+    """Per-core independence: vmapped allocs equal per-core sequential ones."""
+    cfg = buddy.BuddyConfig(heap_bytes=1 << 12, min_block=32)
+    n_cores = 4
+    states = jax.vmap(lambda _: buddy.init(cfg))(jnp.arange(n_cores))
+    sizes = jnp.array([32, 64, 128, 256], jnp.int32)
+    st2, offs, evs = jax.vmap(lambda s, z: buddy.alloc(cfg, s, z))(states, sizes)
+    for i in range(n_cores):
+        py = PyBuddy(1 << 12, 32)
+        assert int(offs[i]) == py.alloc(int(sizes[i]))
+        assert py.longest == [int(x) for x in st2.longest[i]]

@@ -1,0 +1,162 @@
+"""Tests for metadata-cache simulators, cost model, design space, and the
+composed system (strawman / PIM-malloc-SW / PIM-malloc-HW/SW)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import buddy_cache as bc
+from repro.core import cost_model as cm
+from repro.core import design_space as ds
+from repro.core import system as sysm
+
+
+# ---------------------------------------------------------------- buddy cache
+def test_cam_lru_behavior():
+    cfg = bc.BuddyCacheConfig(n_entries=2)
+    st = bc.buddy_cache_init(cfg)
+    acc = jax.jit(functools.partial(bc.buddy_cache_access, cfg))
+    # words: nodes 0-15 -> word 0, 16-31 -> word 1, 32-47 -> word 2
+    st, h, d = acc(st, jnp.int32(0))
+    assert not bool(h) and int(d) == bc.WORD_BYTES
+    st, h, _ = acc(st, jnp.int32(5))   # same word -> hit
+    assert bool(h)
+    st, h, _ = acc(st, jnp.int32(16))  # second entry
+    assert not bool(h)
+    st, h, _ = acc(st, jnp.int32(32))  # evicts LRU (word 0)
+    assert not bool(h)
+    st, h, _ = acc(st, jnp.int32(17))  # word 1 still resident
+    assert bool(h)
+    st, h, _ = acc(st, jnp.int32(1))   # word 0 was evicted
+    assert not bool(h)
+
+
+def test_cam_vs_python_lru():
+    """Random trace: CAM sim matches a dict-based LRU reference."""
+    import random
+
+    cfg = bc.BuddyCacheConfig(n_entries=4)
+    st = bc.buddy_cache_init(cfg)
+    acc = jax.jit(functools.partial(bc.buddy_cache_access, cfg))
+    lru, clock = {}, 0
+    rng = random.Random(0)
+    for _ in range(200):
+        node = rng.randrange(0, 512)
+        word = node // bc.NODES_PER_WORD
+        st, h, _ = acc(st, jnp.int32(node))
+        py_hit = word in lru
+        assert bool(h) == py_hit, (node, word, lru)
+        if not py_hit and len(lru) == 4:
+            del lru[min(lru, key=lru.get)]
+        lru[word] = clock
+        clock += 1
+
+
+def test_sw_buffer_direct_mapped():
+    cfg = bc.SWBufferConfig(buf_bytes=128, line_bytes=64)  # 2 lines
+    st = bc.sw_buffer_init(cfg)
+    acc = jax.jit(functools.partial(bc.sw_buffer_access, cfg))
+    st, h, d = acc(st, jnp.int32(0))       # line 0
+    assert not bool(h) and int(d) == 64
+    st, h, _ = acc(st, jnp.int32(100))     # word 6, line 0 -> hit
+    assert bool(h)
+    st, h, _ = acc(st, jnp.int32(300))     # word 18, line 1
+    assert not bool(h)
+    st, h, _ = acc(st, jnp.int32(1026))    # word 64, line 4 -> maps to slot 0, evict
+    assert not bool(h)
+    st, h, _ = acc(st, jnp.int32(0))       # line 0 was evicted
+    assert not bool(h)
+
+
+def test_invalid_nodes_skipped():
+    cfg = bc.BuddyCacheConfig()
+    st = bc.buddy_cache_init(cfg)
+    traces = jnp.array([[-1, -1, 3, -1]], jnp.int32)
+    st, stats = bc.simulate_traces(
+        functools.partial(bc.buddy_cache_access, cfg), st, traces
+    )
+    assert int(stats.hits[0]) == 0 and int(stats.misses[0]) == 1
+
+
+# ------------------------------------------------------------------ cost model
+def test_queuing_latency():
+    cost = cm.DPUCost()
+    path = jnp.array([2, 0, 2, -1], jnp.int32)
+    pos = jnp.array([0, -1, 1, -1], jnp.int32)
+    svc = jnp.array([100.0, 0.0, 200.0, 0.0], jnp.float32)
+    lat = cm.round_latency_cyc(cost, path, pos, svc)
+    assert float(lat[0]) == 100.0            # first backend user: no wait
+    assert float(lat[1]) == cost.cyc_front_hit
+    assert float(lat[2]) == 100.0 + 200.0    # waits for user 0
+    assert float(lat[3]) == 0.0
+
+
+# ---------------------------------------------------------------- design space
+def test_fig5_qualitative_shape():
+    sweep = ds.sweep(n_cores_list=(1, 64, 512))
+    red = sweep["pim_meta_pim_exec"]
+    # winner: flat in N
+    assert abs(red[512]["total"] - red[1]["total"]) / red[1]["total"] < 1e-6
+    # all others grow with N and are worse at 512 cores
+    for s in ds.STRATEGIES:
+        if s == "pim_meta_pim_exec":
+            continue
+        assert sweep[s][512]["total"] > sweep[s][1]["total"]
+        assert sweep[s][512]["total"] > red[512]["total"], s
+    # metadata movers are transfer-dominated at 512 cores (Fig 5b)
+    for s in ("host_meta_pim_exec", "pim_meta_host_exec"):
+        assert sweep[s][512]["xfer"] > sweep[s][512]["exec"] * 0.5, s
+
+
+# --------------------------------------------------------------------- system
+@pytest.mark.parametrize("kind", sysm.KINDS)
+def test_system_round_runs(kind):
+    cfg = sysm.SystemConfig(kind=kind, heap_bytes=1 << 18, num_threads=4)
+    st = sysm.system_init(cfg)
+    st, ptrs, info = jax.jit(lambda s, z: sysm.malloc_round(cfg, s, z))(
+        st, jnp.array([32, 256, 2048, 8192], jnp.int32)
+    )
+    assert all(int(p) >= 0 for p in ptrs)
+    assert np.all(np.asarray(info.latency_cyc) >= 0)
+    st, info_f = jax.jit(lambda s, p: sysm.free_round(cfg, s, p))(st, ptrs)
+    assert np.all(np.asarray(info_f.latency_cyc) >= 0)
+
+
+def test_hierarchy_beats_strawman_small_sizes():
+    lat = {}
+    for kind in ("strawman", "sw"):
+        cfg = sysm.SystemConfig(kind=kind, heap_bytes=1 << 20, num_threads=4)
+        st = sysm.system_init(cfg)
+        sz = jnp.full((16, 4), 32, jnp.int32)
+        st, ptrs, infos = jax.jit(
+            lambda s, z: sysm.run_alloc_rounds(cfg, s, z)
+        )(st, sz)
+        lat[kind] = float(np.mean(np.asarray(infos.latency_cyc)))
+    assert lat["strawman"] > 10 * lat["sw"]
+
+
+def test_hwsw_reduces_dram_traffic():
+    """Fig 16(c): fine-grained buddy cache moves fewer DRAM bytes than SW."""
+    traffic = {}
+    for kind in ("sw", "hwsw"):
+        cfg = sysm.SystemConfig(kind=kind, heap_bytes=1 << 20, num_threads=4)
+        st = sysm.system_init(cfg)
+        sz = jnp.full((32, 4), 4096, jnp.int32)  # all backend ops
+        st, ptrs, infos = jax.jit(
+            lambda s, z: sysm.run_alloc_rounds(cfg, s, z)
+        )(st, sz)
+        traffic[kind] = int(np.sum(np.asarray(infos.dram_bytes)))
+    assert traffic["hwsw"] < traffic["sw"]
+
+
+def test_contention_fluctuation():
+    """Fig 7: multi-thread straw-man latency fluctuates via busy-wait."""
+    cfg = sysm.SystemConfig(kind="strawman", heap_bytes=1 << 20, num_threads=8)
+    st = sysm.system_init(cfg)
+    sz = jnp.full((8, 8), 256, jnp.int32)
+    st, ptrs, infos = jax.jit(lambda s, z: sysm.run_alloc_rounds(cfg, s, z))(st, sz)
+    lat = np.asarray(infos.latency_cyc)
+    spread = lat.max(axis=1) / np.maximum(lat.min(axis=1), 1)
+    assert spread.max() > 3  # later mutex waiters see multiples of the service time

@@ -1,0 +1,153 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+with shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import buddy
+from repro.core.buddy import BuddyConfig
+from repro.kernels import ops
+
+
+# ------------------------------------------------------------- buddy_traverse
+@pytest.mark.parametrize("heap,min_block", [(1 << 14, 32), (1 << 16, 64),
+                                            (1 << 18, 4096)])
+@pytest.mark.parametrize("cores,batch", [(1, 8), (4, 16)])
+def test_buddy_traverse_matches_ref(heap, min_block, cores, batch):
+    cfg = BuddyConfig(heap_bytes=heap, min_block=min_block)
+    tree = jax.vmap(lambda _: buddy.init(cfg).longest)(jnp.arange(cores))
+    rng = np.random.RandomState(0)
+    sizes = jnp.asarray(
+        rng.choice([min_block, min_block * 2, min_block * 7, heap // 8],
+                   size=(cores, batch)), jnp.int32)
+    offs_k, tree_k = ops.buddy_alloc_batch(
+        tree, sizes, heap_bytes=heap, min_block=min_block, interpret=True)
+    offs_r, tree_r = ops.buddy_alloc_batch_ref(
+        tree, sizes, heap_bytes=heap, min_block=min_block)
+    np.testing.assert_array_equal(np.asarray(offs_k), np.asarray(offs_r))
+    np.testing.assert_array_equal(np.asarray(tree_k), np.asarray(tree_r))
+
+
+def test_buddy_traverse_exhaustion():
+    heap, mb = 1 << 12, 32
+    cfg = BuddyConfig(heap_bytes=heap, min_block=mb)
+    tree = buddy.init(cfg).longest[None]
+    sizes = jnp.full((1, 40), 128, jnp.int32)  # 40*128 > 4096 -> some fail
+    offs, _ = ops.buddy_alloc_batch(tree, sizes, heap_bytes=heap, min_block=mb,
+                                    interpret=True)
+    offs = np.asarray(offs)[0]
+    assert (offs >= 0).sum() == heap // 128
+    assert (offs[heap // 128:] == -1).all()
+
+
+# ------------------------------------------------------------------ freelist
+@pytest.mark.parametrize("T,NC,CAP", [(4, 8, 64), (8, 4, 128)])
+def test_freelist_matches_ref(T, NC, CAP):
+    rng = np.random.RandomState(1)
+    counts = jnp.asarray(rng.randint(0, CAP, size=(T, NC)), jnp.int32)
+    stacks = jnp.asarray(rng.randint(0, 1 << 20, size=(T, NC, CAP)), jnp.int32)
+    for trial in range(3):
+        op = jnp.asarray(rng.randint(-1, 2, size=(T,)), jnp.int32)
+        cls = jnp.asarray(rng.randint(0, NC, size=(T,)), jnp.int32)
+        ptr = jnp.asarray(rng.randint(0, 1 << 20, size=(T,)), jnp.int32)
+        pk, ck, sk = ops.freelist_op(stacks, counts, op, cls, ptr, interpret=True)
+        pr, cr, sr = ops.freelist_op_ref(stacks, counts, op, cls, ptr)
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+        stacks, counts = sk, ck
+
+
+def test_freelist_pop_empty_and_push_full():
+    T, NC, CAP = 2, 2, 4
+    counts = jnp.array([[0, 4], [1, 4]], jnp.int32)
+    stacks = jnp.arange(T * NC * CAP, dtype=jnp.int32).reshape(T, NC, CAP)
+    op = jnp.array([0, 1], jnp.int32)      # pop empty class, push full class
+    cls = jnp.array([0, 1], jnp.int32)
+    ptr = jnp.array([111, 222], jnp.int32)
+    pk, ck, sk = ops.freelist_op(stacks, counts, op, cls, ptr, interpret=True)
+    assert int(pk[0]) == -1                    # pop from empty -> -1
+    assert int(ck[0, 0]) == 0
+    np.testing.assert_array_equal(np.asarray(sk[1, 1]), np.asarray(stacks[1, 1]))
+
+
+# ------------------------------------------------------------ paged attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,D,pages,page_size", [
+    (2, 4, 2, 128, 4, 128),
+    (1, 8, 1, 128, 2, 128),   # MQA
+    (3, 6, 6, 128, 3, 128),   # MHA
+])
+def test_paged_attention_matches_ref(B, H, KVH, D, pages, page_size, dtype):
+    rng = np.random.RandomState(2)
+    N = pages * B + 2
+    q = jnp.asarray(rng.randn(B, H, D), dtype) * 0.1
+    k_pages = jnp.asarray(rng.randn(N, page_size, KVH, D), dtype) * 0.1
+    v_pages = jnp.asarray(rng.randn(N, page_size, KVH, D), dtype) * 0.1
+    # each sequence gets distinct pages (as the allocator would hand out)
+    pt = jnp.asarray(
+        rng.permutation(N)[: B * pages].reshape(B, pages), jnp.int32)
+    seq_lens = jnp.asarray(rng.randint(1, pages * page_size, size=(B,)), jnp.int32)
+    out_k = ops.paged_attention_op(q, k_pages, v_pages, pt, seq_lens,
+                                   interpret=True)
+    out_r = ops.paged_attention_ref(q, k_pages, v_pages, pt, seq_lens)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), atol=atol, rtol=atol)
+
+
+def test_paged_attention_respects_page_table():
+    """Swapping page table rows permutes outputs accordingly."""
+    B, H, KVH, D, pages, page_size = 2, 2, 2, 128, 2, 128
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(1, H, D), jnp.float32)
+    q2 = jnp.concatenate([q, q], axis=0)
+    k_pages = jnp.asarray(rng.randn(6, page_size, KVH, D), jnp.float32)
+    v_pages = jnp.asarray(rng.randn(6, page_size, KVH, D), jnp.float32)
+    pt = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    sl = jnp.array([page_size * 2, page_size * 2], jnp.int32)
+    out = ops.paged_attention_op(q2, k_pages, v_pages, pt, sl, interpret=True)
+    out_sw = ops.paged_attention_op(q2, k_pages, v_pages, pt[::-1], sl,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out_sw[1]),
+                               atol=1e-6)
+    assert not np.allclose(np.asarray(out[0]), np.asarray(out[1]))
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,H,KVH,hd,causal,window", [
+    (2, 256, 256, 4, 2, 128, True, 0),
+    (1, 512, 512, 4, 1, 128, True, 128),   # MQA + sliding window
+    (2, 128, 384, 6, 6, 128, False, 0),    # MHA, cross-shaped (S != T)
+])
+def test_flash_kernel_matches_dense(B, S, T, H, KVH, hd, causal, window, dtype):
+    from repro.models import layers
+
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(B, S, H, hd), dtype) * 0.2
+    k = jnp.asarray(rng.randn(B, T, KVH, hd), dtype) * 0.2
+    v = jnp.asarray(rng.randn(B, T, KVH, hd), dtype) * 0.2
+    out_k = ops.flash_attention_op(q, k, v, causal=causal, window=window,
+                                   block_q=128, block_kv=128, interpret=True)
+    out_r = layers.attention(q, k, v, causal=causal, window=window)
+    atol = 2.5e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_kernel_odd_blocks():
+    """Block sizes auto-fit non-multiple sequence lengths."""
+    from repro.models import layers
+
+    rng = np.random.RandomState(8)
+    q = jnp.asarray(rng.randn(1, 192, 2, 64), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(1, 192, 2, 64), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(1, 192, 2, 64), jnp.float32) * 0.3
+    out_k = ops.flash_attention_op(q, k, v, causal=True, block_q=128,
+                                   block_kv=128, interpret=True)
+    out_r = layers.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=3e-5, rtol=3e-5)

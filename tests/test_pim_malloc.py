@@ -1,0 +1,162 @@
+"""Tests for the hierarchical PIM-malloc-SW allocator (thread cache + buddy)."""
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pim_malloc as pm
+from repro.core.oracle import PyPimMalloc
+
+CFG = pm.PimMallocConfig(heap_bytes=1 << 20, num_threads=4)
+
+
+@pytest.fixture(scope="module")
+def ops():
+    return (
+        jax.jit(lambda s, z: pm.malloc(CFG, s, z)),
+        jax.jit(lambda s, p: pm.free(CFG, s, p)),
+        jax.jit(lambda s: pm.gc(CFG, s)),
+    )
+
+
+def _assert_state_equal(st_, py, where=""):
+    assert py.buddy.longest == [int(x) for x in st_.buddy.longest], where
+    for t in range(CFG.num_threads):
+        for c in range(CFG.nc):
+            n = int(st_.counts[t][c])
+            assert py.counts[t][c] == n, (where, t, c)
+            assert py.stacks[t][c] == [int(x) for x in st_.stacks[t][c][:n]], (where, t, c)
+
+
+def test_prepopulate_matches_paper():
+    """init pre-carves one 4 KB block per freelist (paper Sec 4.1)."""
+    st_ = pm.init(CFG)
+    for t in range(CFG.num_threads):
+        for c, csize in enumerate(CFG.size_classes):
+            assert int(st_.counts[t][c]) == CFG.block_bytes // csize
+
+
+def test_hit_is_frontend_path(ops):
+    malloc, _, _ = ops
+    st_ = pm.init(CFG)
+    st_, ptrs, ev = malloc(st_, jnp.full((4,), 128, jnp.int32))
+    assert all(int(p) == 0 for p in ev.path)  # all thread-cache hits
+    assert all(int(p) >= 0 for p in ptrs)
+    assert int(st_.stats.front_hits) == 4
+
+
+def test_bypass_path(ops):
+    malloc, free, _ = ops
+    st_ = pm.init(CFG)
+    st_, ptrs, ev = malloc(st_, jnp.full((4,), 8192, jnp.int32))
+    assert all(int(p) == 2 for p in ev.path)  # all bypass
+    assert all(int(x) % 8192 == 0 for x in ptrs)
+    # ptr-only free works for bypass blocks
+    st_, fev = free(st_, ptrs)
+    assert all(int(p) == 1 for p in fev.path)
+
+
+def test_miss_refills_from_buddy(ops):
+    malloc, _, _ = ops
+    st_ = pm.init(CFG)
+    # 2048-class prepopulated with 2 sub-blocks; third alloc misses
+    sizes = jnp.full((4,), 2048, jnp.int32)
+    st_, _, ev0 = malloc(st_, sizes)
+    st_, _, ev1 = malloc(st_, sizes)
+    st_, ptrs, ev2 = malloc(st_, sizes)
+    assert all(int(p) == 0 for p in ev1.path)
+    assert all(int(p) == 1 for p in ev2.path)  # refill
+    assert all(int(x) >= 0 for x in ptrs)
+
+
+def test_backend_serialization_order(ops):
+    malloc, _, _ = ops
+    st_ = pm.init(CFG)
+    st_, _, ev = malloc(st_, jnp.array([8192, 64, 16384, 4096], jnp.int32))
+    # threads 0, 2, 3 bypass -> backend positions 0, 1, 2 in thread order
+    assert [int(x) for x in ev.backend_pos] == [0, -1, 1, 2]
+
+
+def test_gc_merges_full_blocks(ops):
+    malloc, free, gc = ops
+    st_ = pm.init(CFG)
+    free0 = int(jnp.sum(st_.buddy.longest[1] == 0))
+    # exhaust + free the 1024-class, then gc twice
+    st_, p1, _ = malloc(st_, jnp.full((4,), 1024, jnp.int32))
+    st_, p2, _ = malloc(st_, jnp.full((4,), 1024, jnp.int32))
+    st_, p3, _ = malloc(st_, jnp.full((4,), 1024, jnp.int32))
+    for p in (p1, p2, p3):
+        st_, _ = free(st_, p)
+    st_ = gc(st_)
+    st_ = gc(st_)
+    assert int(st_.stats.gc_blocks) >= 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_matches_oracle(seed):
+    cfg = pm.PimMallocConfig(heap_bytes=1 << 18, num_threads=4)
+    st_ = pm.init(cfg)
+    py = PyPimMalloc(heap_bytes=1 << 18, num_threads=4)
+    jm = jax.jit(lambda s, z: pm.malloc(cfg, s, z))
+    jf = jax.jit(lambda s, p: pm.free(cfg, s, p))
+    jg = jax.jit(lambda s: pm.gc(cfg, s))
+    rng = random.Random(seed)
+    live = [[] for _ in range(4)]
+    for i in range(30):
+        op = rng.random()
+        if op < 0.55:
+            sizes = [rng.choice([16, 100, 256, 2048, 3000, 8192]) for _ in range(4)]
+            st_, ptrs, ev = jm(st_, jnp.array(sizes, jnp.int32))
+            pptrs, ppaths = py.malloc(sizes)
+            assert [int(x) for x in ptrs] == pptrs, (seed, i)
+            assert [int(x) for x in ev.path] == ppaths, (seed, i)
+            for t in range(4):
+                if pptrs[t] >= 0:
+                    live[t].append(pptrs[t])
+        elif op < 0.9:
+            ptrs = [live[t].pop(rng.randrange(len(live[t])))
+                    if live[t] and rng.random() < 0.8 else -1 for t in range(4)]
+            st_, _ = jf(st_, jnp.array(ptrs, jnp.int32))
+            py.free(ptrs)
+        else:
+            st_ = jg(st_)
+            py.gc()
+    _assert_state_equal(st_, py, f"seed={seed}")
+    sd = {k: int(v) for k, v in st_.stats._asdict().items()}
+    assert sd["dropped_frees"] == py.stats["dropped"]
+    assert sd["gc_blocks"] == py.stats["gc_blocks"]
+
+
+def test_no_overlap_across_threads(ops):
+    """Live pointers from different threads never overlap (heap safety)."""
+    malloc, free, _ = ops
+    st_ = pm.init(CFG)
+    rng = random.Random(3)
+    live = []  # (ptr, rounded_size)
+    for _ in range(25):
+        sizes = [rng.choice([16, 64, 256, 2048, 8192]) for _ in range(4)]
+        st_, ptrs, _ = malloc(st_, jnp.array(sizes, jnp.int32))
+        for t in range(4):
+            p = int(ptrs[t])
+            if p >= 0:
+                rs = max(1 << (sizes[t] - 1).bit_length(), 16)
+                live.append((p, rs))
+        ivs = sorted((p, p + s) for p, s in live)
+        for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+            assert a1 <= b0
+
+
+def test_api_allocator_roundtrip():
+    from repro.core.api import initAllocator
+
+    a = initAllocator(1 << 18, num_threads=4)
+    p1 = a.pimMalloc(100)
+    p2 = a.pimMalloc(100)
+    assert p1 >= 0 and p2 >= 0 and p1 != p2
+    a.pimFree(p1)
+    a.pimFree(p2)
+    assert a.stats["front_hits"] == 2
+    assert a.stats["frees_small"] == 2
