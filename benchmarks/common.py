@@ -1,10 +1,16 @@
-"""Shared benchmark helpers: compiled microbench loops + CSV emission."""
+"""Shared benchmark helpers: compiled microbench loops + CSV emission.
+
+Microbenchmarks drive the allocator through the `repro.core.heap` protocol
+(`run_rounds` / `run_alloc_free_rounds` — the same `step` that serves every
+backend kind), so figures measure exactly the public surface.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import heap as heap_api
 from repro.core import system as sysm
 
 ROWS = []
@@ -20,21 +26,22 @@ def micro_alloc(kind: str, size: int, nthreads: int, rounds: int = 128,
                 heap: int = 1 << 25, T: int = 16, alloc_free: bool = False):
     """Fig 14-style microbenchmark: per-thread latency stats (us)."""
     cfg = sysm.SystemConfig(kind=kind, heap_bytes=heap, num_threads=T)
-    st = sysm.system_init(cfg)
+    st = heap_api.init(cfg)
     sizes = jnp.where(jnp.arange(T) < nthreads, size, 0).astype(jnp.int32)
     sz = jnp.tile(sizes[None, :], (rounds, 1))
     if alloc_free:
-        run = jax.jit(lambda s, z: sysm.run_alloc_free_rounds(cfg, s, z))
-        st, infos_a, infos_f = run(st, sz)
-        lat = (np.asarray(infos_a.latency_cyc)
-               + np.asarray(infos_f.latency_cyc))[:, :nthreads]
-        dram = (np.asarray(infos_a.dram_bytes).sum()
-                + np.asarray(infos_f.dram_bytes).sum())
+        run = jax.jit(lambda s, z: heap_api.run_alloc_free_rounds(cfg, s, z))
+        st, resp_a, resp_f = run(st, sz)
+        lat = (np.asarray(resp_a.latency_cyc)
+               + np.asarray(resp_f.latency_cyc))[:, :nthreads]
+        dram = (np.asarray(resp_a.dram_bytes).sum()
+                + np.asarray(resp_f.dram_bytes).sum())
     else:
-        run = jax.jit(lambda s, z: sysm.run_alloc_rounds(cfg, s, z))
-        st, ptrs, infos = run(st, sz)
-        lat = np.asarray(infos.latency_cyc)[:, :nthreads]
-        dram = np.asarray(infos.dram_bytes).sum()
+        run = jax.jit(lambda s, z: heap_api.run_rounds(
+            cfg, s, jax.vmap(heap_api.malloc_request)(z)))
+        st, resp = run(st, sz)
+        lat = np.asarray(resp.latency_cyc)[:, :nthreads]
+        dram = np.asarray(resp.dram_bytes).sum()
     us = lat / cfg.dpu.freq_hz * 1e6
     return {
         "mean_us": float(us.mean()),

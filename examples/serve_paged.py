@@ -3,6 +3,9 @@
     PYTHONPATH=src python examples/serve_paged.py
 
 Thin wrapper over the production driver (launch/serve.py) at smoke scale.
+Page extents come from the unified heap API (PagePool -> Table-2 facade ->
+heap.step); the attention impl is threaded through ArchConfig.attend_impl
+(no module globals).
 """
 import sys
 

@@ -1,16 +1,32 @@
-"""Paper-facing API (Table 2): initAllocator / pimMalloc / pimFree.
+"""Paper-facing API (Table 2): initAllocator / pimMalloc / pimFree /
+pimRealloc / pimCalloc.
 
-Thin, stateful-convenience wrapper over the pure-functional core so the
-examples read like the paper's UPMEM programs. For performance-critical /
-distributed use, call the pure functions in `repro.core.pim_malloc` (or the
-batched `repro.core.system`) directly and manage state explicitly.
+Thin, stateful-convenience facade over the transform-native protocol in
+`repro.core.heap` so the examples read like the paper's UPMEM programs.
+Every method builds one `AllocRequest` batching this call's per-thread ops
+and runs a single jitted `heap.step` round — there is exactly one compiled
+step per (kind, shape), shared by all methods, instead of one scan per
+Python-level call. For performance-critical / distributed use, call
+`heap.step` (or `heap.MultiCoreHeap`) directly and manage state explicitly.
+
+Migration from the pre-protocol Allocator: constructor args and
+`pimMalloc` / `pimFree` / `pimMallocBatch` / `pimFreeBatch` / `gc` /
+`stats` are unchanged; the facade now also exposes `pimRealloc` /
+`pimCalloc`, a `kind=` selector ("sw" default, "hwsw", "strawman"), the
+raw `request()` entry point, and `last_info` (per-thread DPU latencies of
+the most recent round). See docs/api.md.
 """
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 
-from . import pim_malloc
-from .pim_malloc import PimMallocConfig, PimMallocState
+from . import heap, pim_malloc
+from .heap import AllocRequest, AllocResponse
+from .pim_malloc import PimMallocConfig
+from .system import SystemConfig, SystemState
 
 
 class Allocator:
@@ -18,40 +34,81 @@ class Allocator:
 
     def __init__(self, heap_bytes: int = 32 * 1024 * 1024,
                  size_classes=(16, 32, 64, 128, 256, 512, 1024, 2048),
-                 num_threads: int = 16, prepopulate: bool = True):
-        self.cfg = PimMallocConfig(
+                 num_threads: int = 16, prepopulate: bool = True,
+                 kind: str = "sw"):
+        pm = PimMallocConfig(
             heap_bytes=heap_bytes, size_classes=tuple(size_classes),
             num_threads=num_threads,
         )
-        self.state: PimMallocState = pim_malloc.init(self.cfg, prepopulate)
+        self.cfg = SystemConfig(kind=kind, heap_bytes=heap_bytes,
+                                num_threads=num_threads, pm=pm)
+        self.state: SystemState = heap.init(self.cfg, prepopulate)
+        self._step = jax.jit(functools.partial(heap.step, self.cfg))
+        self.last_info: AllocResponse | None = None
+
+    # -- protocol entry point -------------------------------------------------
+    def request(self, req: AllocRequest) -> AllocResponse:
+        """Serve one batched request round; advances the heap state."""
+        self.state, resp = self._step(self.state, req)
+        self.last_info = resp
+        return resp
+
+    def _one(self, build, thread: int):
+        T = self.cfg.num_threads
+        active = jnp.zeros((T,), bool).at[thread].set(True)
+        return self.request(build(active))
 
     # -- Table 2 API ---------------------------------------------------------
     def pimMalloc(self, size: int, thread: int = 0) -> int:
-        sizes = jnp.zeros((self.cfg.num_threads,), jnp.int32).at[thread].set(size)
-        active = jnp.zeros((self.cfg.num_threads,), bool).at[thread].set(True)
-        self.state, ptrs, _ = pim_malloc.malloc(self.cfg, self.state, sizes, active)
-        return int(ptrs[thread])
+        resp = self._one(lambda a: heap.malloc_request(
+            jnp.full((self.cfg.num_threads,), size, jnp.int32), a), thread)
+        return int(resp.ptr[thread])
 
     def pimFree(self, ptr: int, thread: int = 0) -> None:
-        ptrs = jnp.full((self.cfg.num_threads,), -1, jnp.int32).at[thread].set(ptr)
-        self.state, _ = pim_malloc.free(self.cfg, self.state, ptrs)
+        self._one(lambda a: heap.free_request(
+            jnp.full((self.cfg.num_threads,), ptr, jnp.int32), a), thread)
+
+    def pimRealloc(self, ptr: int, size: int, thread: int = 0) -> int:
+        T = self.cfg.num_threads
+        resp = self._one(lambda a: heap.realloc_request(
+            jnp.full((T,), ptr, jnp.int32), jnp.full((T,), size, jnp.int32),
+            a), thread)
+        return int(resp.ptr[thread])
+
+    def pimCalloc(self, nmemb: int, size: int, thread: int = 0) -> int:
+        T = self.cfg.num_threads
+        resp = self._one(lambda a: heap.calloc_request(
+            jnp.full((T,), nmemb, jnp.int32), jnp.full((T,), size, jnp.int32),
+            a), thread)
+        return int(resp.ptr[thread])
 
     # -- batched (one request per hardware thread) ----------------------------
     def pimMallocBatch(self, sizes) -> jnp.ndarray:
-        sizes = jnp.asarray(sizes, jnp.int32)
-        self.state, ptrs, _ = pim_malloc.malloc(self.cfg, self.state, sizes)
-        return ptrs
+        return self.request(heap.malloc_request(sizes)).ptr
 
     def pimFreeBatch(self, ptrs) -> None:
-        self.state, _ = pim_malloc.free(self.cfg, self.state,
-                                        jnp.asarray(ptrs, jnp.int32))
+        self.request(heap.free_request(ptrs))
+
+    def pimReallocBatch(self, ptrs, sizes) -> jnp.ndarray:
+        return self.request(heap.realloc_request(ptrs, sizes)).ptr
+
+    def pimCallocBatch(self, nmemb, sizes) -> jnp.ndarray:
+        return self.request(heap.calloc_request(nmemb, sizes)).ptr
 
     def gc(self) -> None:
-        self.state = pim_malloc.gc(self.cfg, self.state)
+        """Merge fully-free thread-cache blocks back into the buddy."""
+        if self.cfg.kind == "strawman":
+            return  # no thread caches to merge
+        self.state = SystemState(
+            alloc=pim_malloc.gc(self.cfg.pm, self.state.alloc),
+            cache=self.state.cache,
+        )
 
     @property
     def stats(self) -> dict:
-        return {k: int(v) for k, v in self.state.stats._asdict().items()}
+        if self.cfg.kind == "strawman":
+            return {}
+        return {k: int(v) for k, v in self.state.alloc.stats._asdict().items()}
 
 
 def initAllocator(heap_bytes: int, size_classes=None, **kw) -> Allocator:

@@ -1,0 +1,252 @@
+"""The transform-native allocator surface: one request/response protocol.
+
+Every allocator design point in this repo (``strawman``, ``sw``, ``hwsw``)
+serves the same typed protocol:
+
+    state, response = heap.step(cfg, state, request)
+
+``AllocRequest`` carries one op per hardware thread — MALLOC / FREE /
+REALLOC / CALLOC / NOOP — as a fixed-shape pytree of int32[T] leaves, and
+``AllocResponse`` returns pointers, result paths, and the DPU cost model's
+per-thread latency / metadata-traffic accounting.  ``step`` is pure and
+shape-stable, so the transforms compose the way the paper's scaling story
+requires:
+
+  * one PIM core      : ``jax.jit(partial(heap.step, cfg))``
+  * C cores, one rank : ``jax.vmap`` — see :class:`MultiCoreHeap`
+  * a mesh of ranks   : ``shard_map`` of the vmapped step (metadata never
+    leaves a core — the PIM-Metadata/PIM-Executed placement of Fig 5)
+
+Backends register through :func:`register`; the implementations live in
+``repro.core.system`` (cost-model instrumented) on top of the functional
+allocators in ``repro.core.pim_malloc`` / ``repro.core.buddy``.  The
+paper-facing Table 2 names (``initAllocator`` / ``pimMalloc`` / ``pimFree``
+/ ``pimRealloc`` / ``pimCalloc``) are a thin stateful facade over this
+module — see ``repro.core.api``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Per-thread op codes (int32). CALLOC is MALLOC + zero-fill cost; the request
+# carries the total byte count (nmemb * size), see `calloc_request`.
+OP_NOOP = 0
+OP_MALLOC = 1
+OP_FREE = 2
+OP_REALLOC = 3
+OP_CALLOC = 4
+
+OP_NAMES = {OP_NOOP: "noop", OP_MALLOC: "malloc", OP_FREE: "free",
+            OP_REALLOC: "realloc", OP_CALLOC: "calloc"}
+
+
+class AllocRequest(NamedTuple):
+    """One batched request round: one op per hardware thread.
+
+    op   int32[T]  OP_* code
+    size int32[T]  bytes (MALLOC/CALLOC/REALLOC); ignored for FREE/NOOP
+    ptr  int32[T]  heap offset (FREE/REALLOC); ignored otherwise (-1)
+    """
+
+    op: jnp.ndarray
+    size: jnp.ndarray
+    ptr: jnp.ndarray
+
+
+class AllocResponse(NamedTuple):
+    """Per-thread results of one protocol round.
+
+    ptr          int32[T]   resulting pointer: new block for MALLOC/CALLOC,
+                            surviving block for REALLOC, -1 for FREE/NOOP/fail
+    ok           bool[T]    op succeeded (NOOP -> False)
+    path         int32[T]   legacy path code (0 hit / 1 refill / 2 bypass /
+                            3 fail for allocs; 0 small / 1 big / 2 dropped
+                            for frees; -1 idle)
+    moved        bool[T]    REALLOC relocated the block (alloc+copy+free)
+    latency_cyc  float32[T] DPU cycles incl. mutex queuing + copy/zero DMA
+    backend_cyc  float32[T] buddy-backend service cycles (excl. queuing)
+    meta_hits    int32[T]   metadata-cache hits charged to this thread
+    meta_misses  int32[T]
+    dram_bytes   int32[T]
+    """
+
+    ptr: jnp.ndarray
+    ok: jnp.ndarray
+    path: jnp.ndarray
+    moved: jnp.ndarray
+    latency_cyc: jnp.ndarray
+    backend_cyc: jnp.ndarray
+    meta_hits: jnp.ndarray
+    meta_misses: jnp.ndarray
+    dram_bytes: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# request builders
+# ---------------------------------------------------------------------------
+def _mask(active, T):
+    if active is None:
+        return jnp.ones((T,), bool)
+    return jnp.asarray(active, bool)
+
+
+def noop_request(num_threads: int) -> AllocRequest:
+    z = jnp.zeros((num_threads,), jnp.int32)
+    return AllocRequest(op=z, size=z, ptr=z - 1)
+
+
+def malloc_request(sizes, active=None) -> AllocRequest:
+    sizes = jnp.asarray(sizes, jnp.int32)
+    on = _mask(active, sizes.shape[-1]) & (sizes > 0)
+    return AllocRequest(op=jnp.where(on, OP_MALLOC, OP_NOOP).astype(jnp.int32),
+                        size=jnp.where(on, sizes, 0),
+                        ptr=jnp.full_like(sizes, -1))
+
+
+def free_request(ptrs, active=None) -> AllocRequest:
+    ptrs = jnp.asarray(ptrs, jnp.int32)
+    on = _mask(active, ptrs.shape[-1]) & (ptrs >= 0)
+    return AllocRequest(op=jnp.where(on, OP_FREE, OP_NOOP).astype(jnp.int32),
+                        size=jnp.zeros_like(ptrs),
+                        ptr=jnp.where(on, ptrs, -1))
+
+
+def realloc_request(ptrs, sizes, active=None) -> AllocRequest:
+    ptrs = jnp.asarray(ptrs, jnp.int32)
+    sizes = jnp.asarray(sizes, jnp.int32)
+    on = _mask(active, ptrs.shape[-1])
+    return AllocRequest(op=jnp.where(on, OP_REALLOC, OP_NOOP).astype(jnp.int32),
+                        size=jnp.where(on, sizes, 0),
+                        ptr=jnp.where(on, ptrs, -1))
+
+
+def calloc_request(nmemb, sizes, active=None) -> AllocRequest:
+    """calloc(nmemb, size): total bytes with the C overflow guard — an
+    overflowing product becomes a failing (INT32_MAX) request, never a small
+    wrapped one."""
+    from .pim_malloc import total_calloc_bytes
+    sizes = jnp.asarray(sizes, jnp.int32)
+    total = total_calloc_bytes(nmemb, sizes)
+    on = _mask(active, sizes.shape[-1]) & (total > 0)
+    return AllocRequest(op=jnp.where(on, OP_CALLOC, OP_NOOP).astype(jnp.int32),
+                        size=jnp.where(on, total, 0),
+                        ptr=jnp.full_like(sizes, -1))
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+_BACKENDS: dict[str, Callable] = {}
+
+
+def register(kind: str):
+    """Register a backend step: fn(cfg, state, AllocRequest) -> (state, AllocResponse)."""
+
+    def deco(fn):
+        _BACKENDS[kind] = fn
+        return fn
+
+    return deco
+
+
+def kinds() -> tuple:
+    _ensure_backends()
+    return tuple(sorted(_BACKENDS))
+
+
+def _ensure_backends():
+    if not _BACKENDS:
+        from . import system  # noqa: F401  (registers strawman/sw/hwsw)
+
+
+def init(cfg, prepopulate: bool = True):
+    """Fresh heap state for `cfg` (a `system.SystemConfig`)."""
+    from . import system
+    return system.system_init(cfg, prepopulate=prepopulate)
+
+
+def step(cfg, state, request: AllocRequest):
+    """Serve one batched request round on the backend named by `cfg.kind`."""
+    _ensure_backends()
+    return _BACKENDS[cfg.kind](cfg, state, request)
+
+
+# ---------------------------------------------------------------------------
+# scan / multi-core drivers
+# ---------------------------------------------------------------------------
+def run_rounds(cfg, state, requests: AllocRequest):
+    """scan `step` over an [R, T]-leaved request tape.
+
+    Returns (state, AllocResponse with [R, T] leaves).
+    """
+
+    def body(st, req):
+        st, resp = step(cfg, st, req)
+        return st, resp
+
+    return lax.scan(body, state, requests)
+
+
+def run_alloc_free_rounds(cfg, state, sizes_rounds):
+    """Fig 6's (de)allocation loop: each round mallocs sizes[r] then frees
+    the pointers it just received. Returns (state, alloc resp, free resp)."""
+
+    def body(st, sizes):
+        st, ra = step(cfg, st, malloc_request(sizes))
+        st, rf = step(cfg, st, free_request(ra.ptr))
+        return st, (ra, rf)
+
+    state, (ra, rf) = lax.scan(body, state, sizes_rounds)
+    return state, ra, rf
+
+
+def multicore_init(cfg, num_cores: int, prepopulate: bool = True):
+    """Stacked per-core states: every leaf gains a leading [C] axis."""
+    st = init(cfg, prepopulate=prepopulate)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_cores,) + x.shape), st)
+
+
+def multicore_step(cfg, states, requests: AllocRequest):
+    """vmap of `step` over the core axis: requests are [C, T]-leaved."""
+    return jax.vmap(functools.partial(step, cfg))(states, requests)
+
+
+class MultiCoreHeap:
+    """C independent per-core heaps behind one `[C, T]` batched entry point.
+
+    The whole PIM system is literally `jit(vmap(step))` — core i's requests
+    can never perturb core j's state because the states are disjoint slices
+    of one stacked pytree. A TPU-mesh deployment shard_maps this same step
+    over the core axis (see repro.launch).
+    """
+
+    def __init__(self, cfg, num_cores: int, prepopulate: bool = True):
+        self.cfg = cfg
+        self.num_cores = num_cores
+        self.state = multicore_init(cfg, num_cores, prepopulate=prepopulate)
+        self._step = jax.jit(jax.vmap(functools.partial(step, cfg)))
+
+    @property
+    def num_threads(self) -> int:
+        return self.cfg.num_threads
+
+    def step(self, request: AllocRequest) -> AllocResponse:
+        """Serve a [C, T] request batch; advances the stacked state."""
+        self.state, resp = self._step(self.state, request)
+        return resp
+
+    def malloc(self, sizes, active=None) -> AllocResponse:
+        return self.step(jax.vmap(malloc_request)(
+            jnp.asarray(sizes, jnp.int32),
+            None if active is None else jnp.asarray(active, bool)))
+
+    def free(self, ptrs, active=None) -> AllocResponse:
+        return self.step(jax.vmap(free_request)(
+            jnp.asarray(ptrs, jnp.int32),
+            None if active is None else jnp.asarray(active, bool)))

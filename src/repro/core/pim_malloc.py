@@ -118,6 +118,23 @@ class FreeEvent(NamedTuple):
     trace: jnp.ndarray
 
 
+class ReallocMeta(NamedTuple):
+    """Size-class analysis of live pointers for pim_realloc (all [T])."""
+
+    valid_old: jnp.ndarray  # bool — ptr maps to tracked metadata
+    in_place: jnp.ndarray   # bool — rounded size class unchanged
+    old_bytes: jnp.ndarray  # int32 rounded bytes of the live block (0 if invalid)
+    new_bytes: jnp.ndarray  # int32 rounded bytes of the requested size
+
+
+class ReallocEvent(NamedTuple):
+    malloc: "MallocEvent"     # alloc phase of moved reallocs
+    free: "FreeEvent"         # release phase of moved reallocs
+    in_place: jnp.ndarray     # bool[T] served without touching the heap
+    moved: jnp.ndarray        # bool[T] relocated (new ptr, old freed)
+    copy_bytes: jnp.ndarray   # int32[T] payload DMA'd old -> new block
+
+
 def _class_of(cfg: PimMallocConfig, sizes):
     rounded = next_pow2(jnp.maximum(sizes, min(cfg.size_classes)))
     return jnp.clip(ilog2(rounded) - cfg.log2_min_class, 0, cfg.nc - 1)
@@ -185,6 +202,9 @@ def malloc(cfg: PimMallocConfig, st: PimMallocState, sizes, active=None):
     tlen = cfg.buddy_cfg.trace_len
 
     # ---------------- Phase A: vectorized thread-cache pops (case 1) --------
+    # sizes beyond the heap fail outright (and must not reach next_pow2,
+    # which wraps int32 for sizes > 2^30 — e.g. calloc overflow sentinels).
+    too_big = active & (sizes > cfg.heap_bytes)
     small = active & (sizes <= cfg.max_class) & (sizes > 0)
     c = _class_of(cfg, sizes)
     cnt = st.counts[t_idx, c]
@@ -197,7 +217,7 @@ def malloc(cfg: PimMallocConfig, st: PimMallocState, sizes, active=None):
 
     # ---------------- Phase B: serialized backend (cases 2 & 3, mutex) ------
     refill = small & ~hit
-    bypass = active & (sizes > cfg.max_class)
+    bypass = active & (sizes > cfg.max_class) & ~too_big
     need = refill | bypass
 
     def step(carry, x):
@@ -259,14 +279,15 @@ def malloc(cfg: PimMallocConfig, st: PimMallocState, sizes, active=None):
     path = jnp.where(
         hit, 0,
         jnp.where(refill & ok_b, 1,
-                  jnp.where(bypass & ok_b, 2, jnp.where(need, 3, INVALID))),
+                  jnp.where(bypass & ok_b, 2,
+                            jnp.where(need | too_big, 3, INVALID))),
     ).astype(jnp.int32)
 
     stats = st.stats._replace(
         front_hits=st.stats.front_hits + jnp.sum(hit),
         front_misses=st.stats.front_misses + jnp.sum(refill),
         bypass=st.stats.bypass + jnp.sum(bypass),
-        fails=st.stats.fails + jnp.sum(need & ~ok_b),
+        fails=st.stats.fails + jnp.sum((need & ~ok_b) | too_big),
     )
     new_st = PimMallocState(
         buddy=bstate, counts=counts, stacks=stacks, block_cls=block_cls,
@@ -340,6 +361,107 @@ def free(cfg: PimMallocConfig, st: PimMallocState, ptrs, active=None):
     ev = FreeEvent(path=path.astype(jnp.int32), backend_pos=bpos,
                    levels_up=lv_up, trace=trace)
     return new_st, ev
+
+
+def realloc_meta(cfg: PimMallocConfig, st: PimMallocState, ptrs, sizes) -> ReallocMeta:
+    """Classify live pointers against requested sizes (no state change).
+
+    A pointer is small iff its block is thread-cache-owned (block_cls >= 0),
+    big iff it is the base of a recorded bypass allocation. Grow/shrink stays
+    in place iff the rounded size class (small) or rounded pow2 (big) is
+    unchanged — exactly when the paper's allocator can return the same block.
+    """
+    valid = (ptrs >= 0) & (ptrs < cfg.heap_bytes)
+    b = jnp.where(valid, ptrs // cfg.block_bytes, 0)
+    cls = st.block_cls[b]
+    small_old = valid & (cls >= 0)
+    big_old = (valid & (cls < 0) & (st.big_log2[b] >= 0)
+               & (ptrs % cfg.block_bytes == 0))
+    class_sizes = jnp.array(cfg.size_classes, jnp.int32)
+    old_bytes = jnp.where(
+        small_old, class_sizes[jnp.maximum(cls, 0)],
+        jnp.where(big_old, jnp.int32(1) << jnp.maximum(st.big_log2[b], 0), 0),
+    )
+    new_small = sizes <= cfg.max_class
+    new_bytes = jnp.where(
+        new_small, class_sizes[_class_of(cfg, sizes)],
+        next_pow2(jnp.maximum(sizes, cfg.block_bytes)),
+    )
+    in_place = ((small_old & new_small) | (big_old & ~new_small)) & (
+        new_bytes == old_bytes)
+    return ReallocMeta(valid_old=small_old | big_old, in_place=in_place,
+                       old_bytes=old_bytes, new_bytes=new_bytes)
+
+
+def realloc(cfg: PimMallocConfig, st: PimMallocState, ptrs, sizes, active=None):
+    """pimRealloc(ptr, size) batched over threads.
+
+    Semantics mirror C realloc on the PIM heap:
+      * same rounded size class      -> grow/shrink in place (ptr unchanged)
+      * class changed                -> malloc new + copy payload + free old
+      * ptr invalid/untracked        -> plain malloc(size)
+      * size <= 0 with live ptr      -> free(ptr), returns -1
+      * relocation malloc fails      -> -1, old block left intact
+
+    Returns (state, new_ptrs int32[T], ReallocEvent).
+    """
+    T = cfg.num_threads
+    assert ptrs.shape == (T,)
+    if active is None:
+        active = jnp.ones((T,), bool)
+    sizes = jnp.asarray(sizes, jnp.int32)
+
+    meta = realloc_meta(cfg, st, ptrs, sizes)
+    live = active & (sizes > 0)
+    in_place = live & meta.in_place
+    moved = live & ~meta.in_place
+    free_as_zero = active & (sizes <= 0) & (ptrs >= 0)
+
+    st, mptrs, mev = malloc(cfg, st, jnp.where(moved, sizes, 0), moved)
+    ok_new = mptrs >= 0
+    f_active = (moved & meta.valid_old & ok_new) | free_as_zero
+    st, fev = free(cfg, st, jnp.where(f_active, ptrs, INVALID), f_active)
+
+    new_ptrs = jnp.where(in_place, ptrs,
+                         jnp.where(moved & ok_new, mptrs, INVALID))
+    copy_bytes = jnp.where(moved & ok_new & meta.valid_old,
+                           jnp.minimum(meta.old_bytes, meta.new_bytes), 0)
+    ev = ReallocEvent(malloc=mev, free=fev, in_place=in_place,
+                      moved=moved & ok_new, copy_bytes=copy_bytes)
+    return st, new_ptrs, ev
+
+
+def calloc(cfg: PimMallocConfig, st: PimMallocState, nmemb, elem_sizes,
+           active=None):
+    """pimCalloc(nmemb, size): malloc(nmemb * size) rounded to a size class.
+
+    The returned block is zero-initialized by construction here (the heap is
+    functional metadata; payload zero-fill is charged by the system cost
+    model). An nmemb * size product that overflows int32 becomes a failing
+    (heap-sized) request instead of wrapping small.
+    """
+    T = cfg.num_threads
+    nmemb = jnp.asarray(nmemb, jnp.int32)
+    elem_sizes = jnp.asarray(elem_sizes, jnp.int32)
+    assert nmemb.shape == (T,)
+    if active is None:
+        active = jnp.ones((T,), bool)
+    total = total_calloc_bytes(nmemb, elem_sizes)
+    return malloc(cfg, st, total, active & (total > 0))
+
+
+def total_calloc_bytes(nmemb, elem_sizes):
+    """nmemb * size in int32 with the C-calloc overflow guard: a wrapping
+    product maps to INT32_MAX (which no heap can satisfy), never to a small
+    positive size."""
+    nmemb = jnp.asarray(nmemb, jnp.int32)
+    elem_sizes = jnp.asarray(elem_sizes, jnp.int32)
+    prod = nmemb * elem_sizes
+    exact = (prod > 0) & (prod // jnp.maximum(elem_sizes, 1) == nmemb)
+    requested = (nmemb > 0) & (elem_sizes > 0)
+    return jnp.where(requested,
+                     jnp.where(exact, prod, jnp.int32(jnp.iinfo(jnp.int32).max)),
+                     0)
 
 
 def gc(cfg: PimMallocConfig, st: PimMallocState):

@@ -8,12 +8,18 @@
   hwsw     : PIM-malloc-HW/SW — same frontend/backend, but backend metadata
              served by the 16-entry LRU hardware buddy cache. (Section 4.2.)
 
-`malloc_round` / `free_round` service one batched request round (one request
-per thread), persist metadata-cache state across rounds, and return
-per-thread latencies from the DPU cost model — including mutex busy-wait for
-backend users (Fig 7). A whole multi-core PIM system is `vmap` over cores of
-these functions (see benchmarks/fig5) and a TPU mesh deployment is
+All three kinds serve the `repro.core.heap` request/response protocol: this
+module registers one cost-model-instrumented `heap.step` implementation per
+kind. A step services one mixed-op round (per-thread MALLOC / FREE /
+REALLOC / CALLOC / NOOP), persists metadata-cache state across rounds, and
+returns per-thread latencies — including mutex busy-wait for backend users
+(Fig 7), payload-copy DMA for relocating reallocs, and zero-fill DMA for
+callocs. A whole multi-core PIM system is `vmap` over cores of `heap.step`
+(see `heap.MultiCoreHeap` / benchmarks/fig5) and a TPU mesh deployment is
 `shard_map` of that (`repro.launch`).
+
+`malloc_round` / `free_round` remain as single-op conveniences; they build
+the corresponding protocol request and run the same step.
 """
 from __future__ import annotations
 
@@ -24,11 +30,13 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import lax
 
-from . import buddy, buddy_cache, cost_model, pim_malloc
+from . import buddy, buddy_cache, cost_model, heap, pim_malloc
 from .buddy import BuddyConfig, BuddyState, ilog2, next_pow2
 from .buddy_cache import (BuddyCacheConfig, SWBufferConfig, buddy_cache_access,
                           buddy_cache_init, sw_buffer_access, sw_buffer_init)
 from .cost_model import DPUCost
+from .heap import (OP_CALLOC, OP_FREE, OP_MALLOC, OP_REALLOC, AllocRequest,
+                   AllocResponse)
 from .pim_malloc import INVALID, PimMallocConfig
 
 KINDS = ("strawman", "sw", "hwsw")
@@ -64,7 +72,9 @@ def strawman_malloc(cfg: StrawmanConfig, st: StrawmanState, sizes, active=None):
     T = cfg.num_threads
     if active is None:
         active = jnp.ones((T,), bool)
-    active = active & (sizes > 0)
+    requested = active & (sizes > 0)
+    # heap-exceeding sizes fail without reaching next_pow2 (int32 wrap > 2^30)
+    active = requested & (sizes <= cfg.heap_bytes)
     tlen = cfg.buddy_cfg.trace_len
 
     def step(carry, x):
@@ -94,7 +104,8 @@ def strawman_malloc(cfg: StrawmanConfig, st: StrawmanState, sizes, active=None):
         step, carry, (active, sizes)
     )
     bstate, leaf_log2, _ = carry
-    path = jnp.where(active & ok, 2, jnp.where(active, 3, INVALID)).astype(jnp.int32)
+    path = jnp.where(active & ok, 2,
+                     jnp.where(requested, 3, INVALID)).astype(jnp.int32)
     ev = pim_malloc.MallocEvent(path=path, backend_pos=bpos, levels_down=lv_down,
                                 levels_up=lv_up, trace=trace)
     return StrawmanState(buddy=bstate, leaf_log2=leaf_log2), ptrs, ev
@@ -218,53 +229,154 @@ def _cache_pass(cfg: SystemConfig, cache_st, backend_pos, traces):
     )
 
 
-def malloc_round(cfg: SystemConfig, st: SystemState, sizes, active=None):
-    """One batched round: sizes int32[T]. Returns (state, ptrs, RoundInfo)."""
-    if cfg.kind == "strawman":
-        alloc_st, ptrs, ev = strawman_malloc(cfg.straw, st.alloc, sizes, active)
-    else:
-        alloc_st, ptrs, ev = pim_malloc.malloc(cfg.pm, st.alloc, sizes, active)
+def _strawman_realloc_meta(cfg: StrawmanConfig, st: StrawmanState, ptrs, sizes):
+    """Strawman counterpart of pim_malloc.realloc_meta over leaf_log2."""
+    valid = (ptrs >= 0) & (ptrs < cfg.heap_bytes)
+    leaf = jnp.where(valid, ptrs // cfg.min_block, 0)
+    lg = st.leaf_log2[leaf].astype(jnp.int32)
+    valid_old = valid & (lg >= 0)
+    old_bytes = jnp.where(valid_old, jnp.int32(1) << jnp.maximum(lg, 0), 0)
+    new_bytes = next_pow2(jnp.maximum(sizes, cfg.min_block))
+    return pim_malloc.ReallocMeta(
+        valid_old=valid_old, in_place=valid_old & (new_bytes == old_bytes),
+        old_bytes=old_bytes, new_bytes=new_bytes)
 
-    cache_st, tstats = _cache_pass(cfg, st.cache, ev.backend_pos, ev.trace)
-    backend_cyc = cost_model.backend_op_cyc(
-        cfg.dpu, ev.levels_down, ev.levels_up, tstats.hits, tstats.misses,
-        tstats.dram_bytes,
+
+def _protocol_round(cfg: SystemConfig, st: SystemState, req: AllocRequest,
+                    malloc_fn, free_fn, meta_fn, free_path_fn):
+    """One mixed-op protocol round over kind-specific allocator primitives.
+
+    Phases: (1) realloc size-class analysis on the pre-round metadata,
+    (2) one batched malloc round (MALLOC/CALLOC + relocating REALLOCs),
+    (3) one batched free round (FREE + released old realloc blocks), then a
+    single metadata-cache pass + mutex queue over both phases' backend ops
+    in serialization order (malloc phase drains first — mutex FIFO).
+    """
+    op, size, ptr = req.op, req.size, req.ptr
+    is_alloc = (op == OP_MALLOC) | (op == OP_CALLOC)
+    is_re = op == OP_REALLOC
+    is_free = op == OP_FREE
+
+    meta = meta_fn(st.alloc, ptr, size)
+    re_live = is_re & (size > 0)
+    in_place = re_live & meta.in_place
+    moved = re_live & ~meta.in_place
+    re_free0 = is_re & (size <= 0) & (ptr >= 0)
+
+    # ---- phase 1: batched malloc (new blocks) ------------------------------
+    m_active = (is_alloc & (size > 0)) | moved
+    alloc_st, mptrs, mev = malloc_fn(st.alloc, jnp.where(m_active, size, 0),
+                                     m_active)
+    mok = m_active & (mptrs >= 0)
+
+    # ---- phase 2: batched free (explicit frees + vacated realloc blocks) ---
+    f_active = is_free | (moved & meta.valid_old & mok) | re_free0
+    alloc_st, fev = free_fn(alloc_st, jnp.where(f_active, ptr, INVALID),
+                            f_active)
+    fpath = free_path_fn(fev)
+
+    # ---- one cache pass + one mutex queue over both phases -----------------
+    n_back_m = jnp.sum(mev.backend_pos >= 0)
+    bpos = jnp.concatenate([
+        mev.backend_pos,
+        jnp.where(fev.backend_pos >= 0, fev.backend_pos + n_back_m, INVALID),
+    ])
+    traces = jnp.concatenate([mev.trace, fev.trace], axis=0)
+    cache_st, tstats = _cache_pass(cfg, st.cache, bpos, traces)
+    T = op.shape[0]
+    hits_m, hits_f = tstats.hits[:T], tstats.hits[T:]
+    miss_m, miss_f = tstats.misses[:T], tstats.misses[T:]
+    dram_m, dram_f = tstats.dram_bytes[:T], tstats.dram_bytes[T:]
+
+    cyc_m = cost_model.backend_op_cyc(cfg.dpu, mev.levels_down, mev.levels_up,
+                                      hits_m, miss_m, dram_m)
+    cyc_m = jnp.where(mev.backend_pos >= 0, cyc_m, 0.0)
+    cyc_f = cost_model.backend_op_cyc(cfg.dpu, jnp.zeros_like(fev.levels_up),
+                                      fev.levels_up, hits_f, miss_f, dram_f)
+    cyc_f = jnp.where(fev.backend_pos >= 0, cyc_f, 0.0)
+
+    svc = jnp.concatenate([cyc_m, cyc_f])
+    key = jnp.where(bpos >= 0, bpos, jnp.int32(1 << 30))
+    order = jnp.argsort(key)
+    wait_sorted = jnp.cumsum(svc[order]) - svc[order]
+    wait = jnp.zeros_like(svc).at[order].set(wait_sorted)
+    wait = jnp.where(bpos >= 0, wait, 0.0)
+    wait_m, wait_f = wait[:T], wait[T:]
+
+    dpu = cfg.dpu
+    own_m = (jnp.where(mev.path == 0, dpu.cyc_front_hit, 0.0)
+             + jnp.where(mev.path == 1, dpu.cyc_front_hit + dpu.cyc_refill, 0.0)
+             + cyc_m)
+    lat_m = jnp.where(mev.path >= 0, own_m + wait_m, 0.0)
+    own_f = jnp.where(fpath == 0, dpu.cyc_front_push, 0.0) + cyc_f
+    lat_f = jnp.where(fpath >= 0, own_f + wait_f, 0.0)
+    # relocating realloc DMAs the surviving payload; calloc zero-fills.
+    copy_cyc = jnp.where(
+        moved & mok & meta.valid_old,
+        cost_model.mram_access_cyc(dpu, jnp.minimum(meta.old_bytes,
+                                                    meta.new_bytes)), 0.0)
+    zero_cyc = jnp.where((op == OP_CALLOC) & mok,
+                         cost_model.mram_access_cyc(dpu, size), 0.0)
+    # in-place realloc: O(1) metadata peek, no heap traffic.
+    inplace_cyc = jnp.where(in_place, jnp.float32(dpu.cyc_front_hit), 0.0)
+    latency = lat_m + lat_f + copy_cyc + zero_cyc + inplace_cyc
+
+    out_ptr = jnp.where(is_alloc & mok, mptrs,
+                        jnp.where(in_place, ptr,
+                                  jnp.where(moved & mok, mptrs, INVALID)))
+    ok = (is_alloc & mok) | in_place | (moved & mok) | (
+        (is_free | re_free0) & ((fpath == 0) | (fpath == 1)))
+    path = jnp.where(m_active, mev.path,
+                     jnp.where(is_free | re_free0, fpath,
+                               jnp.where(in_place, 0, INVALID)))
+    resp = AllocResponse(
+        ptr=out_ptr, ok=ok, path=path.astype(jnp.int32), moved=moved & mok,
+        latency_cyc=latency, backend_cyc=cyc_m + cyc_f,
+        meta_hits=hits_m + hits_f, meta_misses=miss_m + miss_f,
+        dram_bytes=dram_m + dram_f,
     )
-    backend_cyc = jnp.where(ev.backend_pos >= 0, backend_cyc, 0.0)
-    lat = cost_model.round_latency_cyc(cfg.dpu, ev.path, ev.backend_pos, backend_cyc)
-    info = RoundInfo(latency_cyc=lat, path=ev.path, meta_hits=tstats.hits,
-                     meta_misses=tstats.misses, dram_bytes=tstats.dram_bytes,
-                     backend_cyc=backend_cyc)
-    return SystemState(alloc=alloc_st, cache=cache_st), ptrs, info
+    return SystemState(alloc=alloc_st, cache=cache_st), resp
+
+
+@heap.register("strawman")
+def _step_strawman(cfg: SystemConfig, st: SystemState, req: AllocRequest):
+    return _protocol_round(
+        cfg, st, req,
+        malloc_fn=lambda s, z, a: strawman_malloc(cfg.straw, s, z, a),
+        free_fn=lambda s, p, a: strawman_free(cfg.straw, s, p, a),
+        meta_fn=lambda s, p, z: _strawman_realloc_meta(cfg.straw, s, p, z),
+        free_path_fn=lambda ev: jnp.where(ev.backend_pos >= 0, 1, INVALID),
+    )
+
+
+@heap.register("sw")
+@heap.register("hwsw")
+def _step_pim(cfg: SystemConfig, st: SystemState, req: AllocRequest):
+    return _protocol_round(
+        cfg, st, req,
+        malloc_fn=lambda s, z, a: pim_malloc.malloc(cfg.pm, s, z, a),
+        free_fn=lambda s, p, a: pim_malloc.free(cfg.pm, s, p, a),
+        meta_fn=lambda s, p, z: pim_malloc.realloc_meta(cfg.pm, s, p, z),
+        free_path_fn=lambda ev: ev.path,
+    )
+
+
+def _round_info(resp: AllocResponse) -> RoundInfo:
+    return RoundInfo(latency_cyc=resp.latency_cyc, path=resp.path,
+                     meta_hits=resp.meta_hits, meta_misses=resp.meta_misses,
+                     dram_bytes=resp.dram_bytes, backend_cyc=resp.backend_cyc)
+
+
+def malloc_round(cfg: SystemConfig, st: SystemState, sizes, active=None):
+    """One all-MALLOC round: sizes int32[T]. Returns (state, ptrs, RoundInfo)."""
+    st, resp = heap.step(cfg, st, heap.malloc_request(sizes, active))
+    return st, resp.ptr, _round_info(resp)
 
 
 def free_round(cfg: SystemConfig, st: SystemState, ptrs, active=None):
-    if cfg.kind == "strawman":
-        alloc_st, ev = strawman_free(cfg.straw, st.alloc, ptrs, active)
-        path = jnp.where(ev.backend_pos >= 0, 1, INVALID)
-    else:
-        alloc_st, ev = pim_malloc.free(cfg.pm, st.alloc, ptrs, active)
-        path = ev.path
-    cache_st, tstats = _cache_pass(cfg, st.cache, ev.backend_pos, ev.trace)
-    backend_cyc = cost_model.backend_op_cyc(
-        cfg.dpu, jnp.zeros_like(ev.levels_up), ev.levels_up, tstats.hits,
-        tstats.misses, tstats.dram_bytes,
-    )
-    backend_cyc = jnp.where(ev.backend_pos >= 0, backend_cyc, 0.0)
-    # frees: small -> push cost; big -> backend cost (+ queue)
-    lat_path = jnp.where(path == 0, 0, jnp.where(path >= 1, 1, INVALID))
-    own = jnp.where(path == 0, cfg.dpu.cyc_front_push, 0.0) + backend_cyc
-    key = jnp.where(ev.backend_pos >= 0, ev.backend_pos, jnp.int32(1 << 30))
-    order = jnp.argsort(key)
-    svc = backend_cyc[order]
-    wait_sorted = jnp.cumsum(svc) - svc
-    wait = jnp.zeros_like(backend_cyc).at[order].set(wait_sorted)
-    wait = jnp.where(ev.backend_pos >= 0, wait, 0.0)
-    lat = jnp.where(path >= 0, own + wait, 0.0)
-    info = RoundInfo(latency_cyc=lat, path=path, meta_hits=tstats.hits,
-                     meta_misses=tstats.misses, dram_bytes=tstats.dram_bytes,
-                     backend_cyc=backend_cyc)
-    return SystemState(alloc=alloc_st, cache=cache_st), info
+    """One all-FREE round: ptrs int32[T]. Returns (state, RoundInfo)."""
+    st, resp = heap.step(cfg, st, heap.free_request(ptrs, active))
+    return st, _round_info(resp)
 
 
 def run_alloc_rounds(cfg: SystemConfig, st: SystemState, sizes_rounds):

@@ -16,7 +16,8 @@ pool the Pallas paged-attention kernel expects ([B*P, page, KVH, hd] with
 global page ids), so the TPU kernel and the allocator-shared-pool story are
 exercised end-to-end in examples/serve_paged.py.
 
-`attend` implementations:
+`attend` implementations (explicit `impl=` argument; models thread
+`ArchConfig.attend_impl` through — there is no module-global switch):
   * 'ref'    — pure-jnp batched gather + masked softmax; GSPMD-partitionable
                (used in pjit'd serve steps / the dry run).
   * 'kernel' — Pallas TPU kernel (scalar-prefetched page indices, online
@@ -30,12 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pim_malloc
-from repro.core.pim_malloc import PimMallocConfig
+from repro.core import api, heap
+from repro.core.heap import AllocResponse
 
 PAGE_UNIT = 16  # allocator bytes per page (smallest size class)
-
-ATTEND_IMPL = "ref"  # module default; override per call
 
 
 def pages_per_seq(max_seq: int, page_size: int) -> int:
@@ -125,9 +124,8 @@ def _attend_ref(q, k_pages, v_pages, page_table, seq_lens):
     return o.reshape(B, H, D).astype(q.dtype)
 
 
-def attend(q, k_pages, v_pages, page_table, seq_lens, impl: str | None = None):
+def attend(q, k_pages, v_pages, page_table, seq_lens, impl: str = "ref"):
     """Decode attention over per-seq paged KV. q [B,H,hd] -> [B,H,hd]."""
-    impl = impl or ATTEND_IMPL
     if impl == "kernel":
         from repro.kernels import ops
         B, P, page_size, KVH, hd = k_pages.shape
@@ -236,49 +234,61 @@ class PagePool:
     """Host-side page allocator for serving: PIM-malloc manages page ids.
 
     Pages are allocator 'bytes' at PAGE_UNIT per page; ptr -> page_id =
-    ptr // PAGE_UNIT. One pool per device shard (the allocator state is a
-    fixed-shape pytree, so a multi-device pool is a vmap/shard_map of this
-    over the data axis — see examples/serve_paged.py).
+    ptr // PAGE_UNIT. Built on the `repro.core.heap` protocol through the
+    Table-2 facade, so serving shares one allocator surface (and one jitted
+    step) with the simulators, and every call also yields the DPU cost
+    model's per-thread latencies (`pool.alloc.last_info`). One pool per
+    device shard — a multi-device pool is `heap.MultiCoreHeap` / shard_map
+    over the data axis (see examples/serve_paged.py).
     """
 
-    def __init__(self, n_pages: int, num_threads: int = 16):
+    def __init__(self, n_pages: int, num_threads: int = 16, kind: str = "sw"):
         assert n_pages & (n_pages - 1) == 0, "n_pages must be pow2"
         self.n_pages = n_pages
-        self.cfg = PimMallocConfig(
+        self.alloc = api.Allocator(
             heap_bytes=n_pages * PAGE_UNIT, num_threads=num_threads,
-            size_classes=(16, 32, 64, 128, 256, 512, 1024, 2048),
-            block_bytes=4096,  # 256-page blocks feed the frontend
+            kind=kind,
         )
-        self.state = pim_malloc.init(self.cfg)
+        self.cfg = self.alloc.cfg.pm  # block_bytes=4096: 256-page refills
 
     def alloc_pages(self, n: int, thread: int = 0) -> jnp.ndarray:
         """Contiguous extent of `n` pages; returns page ids [n] (empty on OOM)."""
-        sizes = jnp.zeros((self.cfg.num_threads,), jnp.int32).at[thread].set(
-            n * PAGE_UNIT)
-        active = jnp.zeros((self.cfg.num_threads,), bool).at[thread].set(True)
-        self.state, ptrs, _ = pim_malloc.malloc(self.cfg, self.state, sizes, active)
-        ptr = int(ptrs[thread])
+        ptr = self.alloc.pimMalloc(n * PAGE_UNIT, thread=thread)
         if ptr < 0:
             return jnp.zeros((0,), jnp.int32)
-        base = ptr // PAGE_UNIT
-        return base + jnp.arange(n, dtype=jnp.int32)
+        return ptr // PAGE_UNIT + jnp.arange(n, dtype=jnp.int32)
 
-    def alloc_page_batch(self, threads):
+    def alloc_page_batch(self, threads) -> tuple[jnp.ndarray, AllocResponse]:
         """One single-page allocation per requesting thread (decode growth).
-        threads: bool[T] mask. Returns (int32[T] page ids (-1 = none), event)."""
-        sizes = jnp.where(jnp.asarray(threads), PAGE_UNIT, 0).astype(jnp.int32)
-        self.state, ptrs, ev = pim_malloc.malloc(self.cfg, self.state, sizes,
-                                                 jnp.asarray(threads))
-        return jnp.where(ptrs >= 0, ptrs // PAGE_UNIT, -1), ev
+        threads: bool[T] mask. Returns (int32[T] page ids (-1 = none), resp)."""
+        threads = jnp.asarray(threads)
+        sizes = jnp.where(threads, PAGE_UNIT, 0).astype(jnp.int32)
+        resp = self.alloc.request(heap.malloc_request(sizes, threads))
+        return jnp.where(resp.ptr >= 0, resp.ptr // PAGE_UNIT, -1), resp
+
+    def grow_extent(self, first_page: int, n_pages: int,
+                    thread: int = 0) -> tuple[jnp.ndarray, bool]:
+        """pimRealloc an extent to `n_pages` pages.
+
+        Returns (page ids [n], moved). ids is empty on OOM (the old extent
+        then remains live). When `moved` is True the allocator relocated the
+        extent and freed the old pages: the caller MUST copy the old pages'
+        KV contents into the returned ids before its next allocation, or the
+        old pages may be handed to another sequence.
+        """
+        new_ptr = self.alloc.pimRealloc(int(first_page) * PAGE_UNIT,
+                                        n_pages * PAGE_UNIT, thread=thread)
+        if new_ptr < 0:
+            return jnp.zeros((0,), jnp.int32), False
+        moved = bool(self.alloc.last_info.moved[thread])
+        return new_ptr // PAGE_UNIT + jnp.arange(n_pages, dtype=jnp.int32), moved
 
     def free_extent(self, first_page: int, thread: int = 0) -> None:
-        ptrs = jnp.full((self.cfg.num_threads,), -1, jnp.int32).at[thread].set(
-            int(first_page) * PAGE_UNIT)
-        self.state, _ = pim_malloc.free(self.cfg, self.state, ptrs)
+        self.alloc.pimFree(int(first_page) * PAGE_UNIT, thread=thread)
 
     def gc(self) -> None:
-        self.state = pim_malloc.gc(self.cfg, self.state)
+        self.alloc.gc()
 
     @property
     def stats(self) -> dict:
-        return {k: int(v) for k, v in self.state.stats._asdict().items()}
+        return self.alloc.stats

@@ -13,6 +13,7 @@ Demonstrates the paper's technique as the serving substrate:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -39,8 +40,10 @@ def main():
         cfg = cfg.reduced()
     if cfg.family in ("ssm",):
         raise SystemExit("ssm decode has no paged KV; use examples/quickstart")
+    # the attention impl rides the (frozen) arch config into every
+    # paged.attend call site — no module-global mutation
+    cfg = dataclasses.replace(cfg, attend_impl=args.impl)
     mod = registry.get_module(cfg)
-    paged.ATTEND_IMPL = args.impl
 
     B, S = args.batch, args.prompt_len
     max_seq = S + args.decode_steps + cfg.page_size
@@ -87,22 +90,26 @@ def main():
     toks = jnp.argmax(logits, axis=-1)[:, None]
     t0 = time.time()
     n_page_allocs = 0
+    alloc_cyc = 0.0
     for i in range(args.decode_steps):
         # allocate a fresh page via the frontend when any sequence crosses
         # a page boundary (the paper's fast path, Fig 9 case 1)
         pos = np.asarray(cache["seq_lens"])
         need = (pos % cfg.page_size) == 0
         if need.any():
-            ids, ev = pool.alloc_page_batch(
+            ids, resp = pool.alloc_page_batch(
                 np.pad(need, (0, pool.cfg.num_threads - B)))
             n_page_allocs += int(need.sum())
+            alloc_cyc += float(np.asarray(resp.latency_cyc).max())
         cache, logits = decode(params, cache, {"tokens": toks})
         toks = jnp.argmax(logits, axis=-1)[:, None]
     dt = time.time() - t0
     total = args.decode_steps * B
     print(f"decode: {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s CPU-{args.impl})")
-    print(f"frontend page allocations during decode: {n_page_allocs}")
+    alloc_us = alloc_cyc / pool.alloc.cfg.dpu.freq_hz * 1e6
+    print(f"frontend page allocations during decode: {n_page_allocs} "
+          f"({alloc_us:.2f} us modeled DPU time)")
     print("final allocator stats:", pool.stats)
 
 

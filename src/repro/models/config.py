@@ -59,6 +59,7 @@ class ArchConfig:
     fsdp: bool = False               # shard params+opt over 'data' too (ZeRO-3)
     seq_shard: bool = False          # Megatron-SP: shard residual seq over model
     page_size: int = 128             # paged-KV page tokens
+    attend_impl: str = "ref"         # paged decode attention: 'ref' | 'kernel'
     opt_moment_dtype: str = "float32"
     pad_vocab_to: int = 256          # Megatron-style vocab padding (clean TP)
     attn_4d: bool = False            # [D,H,hd] attention weights (SSPerf iter)

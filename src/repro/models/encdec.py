@@ -207,7 +207,8 @@ def decode(cfg: ArchConfig, params, cache, batch):
         else:
             k_pages = paged.write_token(k_pages, k, cache["page_table"], pos)
             v_pages = paged.write_token(v_pages, v, cache["page_table"], pos)
-            o = paged.attend(q, k_pages, v_pages, cache["page_table"], pos + 1)
+            o = paged.attend(q, k_pages, v_pages, cache["page_table"],
+                             pos + 1, impl=cfg.attend_impl)
         x = x + layers.out_proj(o[:, None], lp["wo"]).astype(x.dtype)
         hx = layers.rms_norm(x, lp["ln_x"])
         qx = layers.qk_proj(hx, lp["xwq"], H, hd)

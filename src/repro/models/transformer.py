@@ -173,7 +173,8 @@ def decode(cfg: ArchConfig, params, cache, batch):
         else:
             k_pages = paged.write_token(k_pages, k, cache["page_table"], pos)
             v_pages = paged.write_token(v_pages, v, cache["page_table"], pos)
-            o = paged.attend(q, k_pages, v_pages, cache["page_table"], pos + 1)
+            o = paged.attend(q, k_pages, v_pages, cache["page_table"],
+                             pos + 1, impl=cfg.attend_impl)
         x = x + layers.out_proj(o[:, None], lp["wo"]).astype(x.dtype)
         h2 = layers.rms_norm(x, lp["ln2"])
         x = x + layers.mlp(h2, lp["w1"], lp["w2"], lp.get("w3"), cfg.mlp)

@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_skip
+
+given, settings, st = hypothesis_or_skip()
 
 from repro.core import buddy
 from repro.core.oracle import PyBuddy

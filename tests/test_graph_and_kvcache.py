@@ -86,7 +86,9 @@ def test_page_pool_hierarchy_paths():
     assert pool.stats["frees_big"] == 1
 
 
-from hypothesis import given, settings, strategies as hst
+from conftest import hypothesis_or_skip
+
+given, settings, hst = hypothesis_or_skip()
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,0 +1,365 @@
+"""Protocol conformance for the unified heap API (repro.core.heap).
+
+One protocol, three backends: `heap.step` must produce exactly the pointer
+sequences of the legacy call paths (`pim_malloc.malloc/free`, the strawman
+allocator, `system.malloc_round/free_round`) on a shared random op tape,
+plus realloc/calloc semantics and multi-core vmap independence.
+"""
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heap
+from repro.core import pim_malloc as pm
+from repro.core import system as sysm
+
+T = 4
+HEAP = 1 << 18
+
+
+def _cfg(kind):
+    return sysm.SystemConfig(kind=kind, heap_bytes=HEAP, num_threads=T)
+
+
+def _random_tape(seed, rounds=12):
+    """Alternating malloc/free rounds with per-thread live-pointer tracking.
+
+    Yields ("malloc", sizes) / ("free", idx) where idx picks from the live
+    list; the driver substitutes actual pointers so all paths share the tape.
+    """
+    rng = random.Random(seed)
+    tape = []
+    for _ in range(rounds):
+        if rng.random() < 0.6:
+            tape.append(("malloc", [rng.choice([16, 100, 256, 2048, 3000, 8192])
+                                    for _ in range(T)]))
+        else:
+            tape.append(("free", [rng.random() for _ in range(T)]))
+    return tape
+
+
+def _drive(tape, malloc_fn, free_fn):
+    """Run a tape against (malloc_fn, free_fn); returns the ptr sequence."""
+    live = [[] for _ in range(T)]
+    seq = []
+    for kind, arg in tape:
+        if kind == "malloc":
+            ptrs = malloc_fn(jnp.array(arg, jnp.int32))
+            for t in range(T):
+                if int(ptrs[t]) >= 0:
+                    live[t].append(int(ptrs[t]))
+            seq.extend(int(p) for p in ptrs)
+        else:
+            ptrs = [live[t].pop(int(r * len(live[t])))
+                    if live[t] and r < 0.8 else -1 for t, r in zip(range(T), arg)]
+            free_fn(jnp.array(ptrs, jnp.int32))
+    return seq
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_step_matches_legacy_pim_malloc(seed):
+    """sw protocol path == raw pim_malloc.malloc/free, pointer for pointer."""
+    cfg = _cfg("sw")
+    tape = _random_tape(seed)
+
+    st_h = heap.init(cfg)
+    step = jax.jit(functools.partial(heap.step, cfg))
+
+    def h_malloc(sizes):
+        nonlocal st_h
+        st_h, resp = step(st_h, heap.malloc_request(sizes))
+        return resp.ptr
+
+    def h_free(ptrs):
+        nonlocal st_h
+        st_h, _ = step(st_h, heap.free_request(ptrs))
+
+    st_l = pm.init(cfg.pm)
+
+    def l_malloc(sizes):
+        nonlocal st_l
+        st_l, ptrs, _ = pm.malloc(cfg.pm, st_l, sizes)
+        return ptrs
+
+    def l_free(ptrs):
+        nonlocal st_l
+        st_l, _ = pm.free(cfg.pm, st_l, ptrs)
+
+    assert _drive(tape, h_malloc, h_free) == _drive(tape, l_malloc, l_free)
+    np.testing.assert_array_equal(np.asarray(st_h.alloc.buddy.longest),
+                                  np.asarray(st_l.buddy.longest))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_step_matches_legacy_strawman(seed):
+    cfg = _cfg("strawman")
+    tape = _random_tape(seed)
+
+    st_h = heap.init(cfg)
+    step = jax.jit(functools.partial(heap.step, cfg))
+
+    def h_malloc(sizes):
+        nonlocal st_h
+        st_h, resp = step(st_h, heap.malloc_request(sizes))
+        return resp.ptr
+
+    def h_free(ptrs):
+        nonlocal st_h
+        st_h, _ = step(st_h, heap.free_request(ptrs))
+
+    st_l = sysm.strawman_init(cfg.straw)
+
+    def l_malloc(sizes):
+        nonlocal st_l
+        st_l, ptrs, _ = sysm.strawman_malloc(cfg.straw, st_l, sizes)
+        return ptrs
+
+    def l_free(ptrs):
+        nonlocal st_l
+        st_l, _ = sysm.strawman_free(cfg.straw, st_l, ptrs)
+
+    assert _drive(tape, h_malloc, h_free) == _drive(tape, l_malloc, l_free)
+
+
+@pytest.mark.parametrize("kind", sysm.KINDS)
+def test_round_wrappers_are_the_protocol(kind):
+    """malloc_round/free_round return the same ptrs+latency as raw heap.step."""
+    cfg = _cfg(kind)
+    sizes = jnp.array([32, 256, 2048, 8192], jnp.int32)
+    st_a = heap.init(cfg)
+    st_b = heap.init(cfg)
+    st_a, ptrs_a, info = sysm.malloc_round(cfg, st_a, sizes)
+    st_b, resp = heap.step(cfg, st_b, heap.malloc_request(sizes))
+    np.testing.assert_array_equal(np.asarray(ptrs_a), np.asarray(resp.ptr))
+    np.testing.assert_allclose(np.asarray(info.latency_cyc),
+                               np.asarray(resp.latency_cyc))
+    st_a, info_f = sysm.free_round(cfg, st_a, ptrs_a)
+    st_b, resp_f = heap.step(cfg, st_b, heap.free_request(resp.ptr))
+    np.testing.assert_allclose(np.asarray(info_f.latency_cyc),
+                               np.asarray(resp_f.latency_cyc))
+
+
+# ------------------------------------------------------------------- realloc
+def test_realloc_in_place_same_class():
+    cfg = _cfg("sw")
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.malloc_request(
+        jnp.full((T,), 100, jnp.int32)))  # 128 B class
+    st, r1 = heap.step(cfg, st, heap.realloc_request(
+        r0.ptr, jnp.array([128, 65, 16, 1], jnp.int32)))  # grow/shrink in class
+    # 128 and 65 round to the same 128 B class -> in place; 16 moves to the
+    # 16 B class; 1 rounds up to the min class (16) -> also moves
+    np.testing.assert_array_equal(np.asarray(r1.ptr[:2]), np.asarray(r0.ptr[:2]))
+    assert not bool(r1.moved[0]) and not bool(r1.moved[1])
+    assert bool(r1.moved[2]) and int(r1.ptr[2]) != int(r0.ptr[2])
+    assert bool(r1.moved[3])
+    assert all(bool(x) for x in r1.ok)
+
+
+def test_realloc_move_frees_old_block():
+    cfg = _cfg("sw")
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.malloc_request(
+        jnp.full((T,), 100, jnp.int32)))
+    st, r1 = heap.step(cfg, st, heap.realloc_request(
+        r0.ptr, jnp.full((T,), 300, jnp.int32)))  # -> 512 B class, relocated
+    assert all(bool(m) for m in r1.moved)
+    # the vacated 128 B sub-blocks went back to each thread's freelist (LIFO):
+    # the next 128 B malloc must hand the old pointers straight back
+    st, r2 = heap.step(cfg, st, heap.malloc_request(
+        jnp.full((T,), 128, jnp.int32)))
+    np.testing.assert_array_equal(np.asarray(r2.ptr), np.asarray(r0.ptr))
+
+
+def test_realloc_null_ptr_is_malloc_and_zero_size_is_free():
+    cfg = _cfg("sw")
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.realloc_request(
+        jnp.full((T,), -1, jnp.int32), jnp.full((T,), 64, jnp.int32)))
+    assert all(int(p) >= 0 for p in r0.ptr)          # realloc(NULL, n) == malloc
+    st, r1 = heap.step(cfg, st, heap.realloc_request(
+        r0.ptr, jnp.zeros((T,), jnp.int32)))
+    assert all(int(p) == -1 for p in r1.ptr)         # realloc(p, 0) == free
+    st, r2 = heap.step(cfg, st, heap.malloc_request(
+        jnp.full((T,), 64, jnp.int32)))
+    np.testing.assert_array_equal(np.asarray(r2.ptr), np.asarray(r0.ptr))
+
+
+def test_realloc_failure_keeps_old_block():
+    cfg = _cfg("sw")
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.malloc_request(
+        jnp.full((T,), 100, jnp.int32)))
+    st, r1 = heap.step(cfg, st, heap.realloc_request(
+        r0.ptr, jnp.full((T,), 2 * HEAP, jnp.int32)))  # cannot be satisfied
+    assert all(int(p) == -1 for p in r1.ptr)
+    assert not any(bool(x) for x in r1.ok)
+    # old blocks still live: freeing them must succeed as small frees (path 0)
+    st, r2 = heap.step(cfg, st, heap.free_request(r0.ptr))
+    assert all(int(p) == 0 for p in r2.path)
+
+
+def test_pim_malloc_realloc_pure_function():
+    """The pim_malloc-level realloc mirrors the protocol semantics."""
+    cfg = pm.PimMallocConfig(heap_bytes=HEAP, num_threads=T)
+    st = pm.init(cfg)
+    st, p0, _ = pm.malloc(cfg, st, jnp.full((T,), 100, jnp.int32))
+    st, p1, ev = pm.realloc(cfg, st, p0, jnp.array([120, 300, 0, -1], jnp.int32))
+    assert int(p1[0]) == int(p0[0]) and bool(ev.in_place[0])
+    assert bool(ev.moved[1]) and int(p1[1]) != int(p0[1])
+    assert int(ev.copy_bytes[1]) == 128                  # min(old 128, new 512)
+    assert int(p1[2]) == -1 and int(p1[3]) == -1         # freed / no-op
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_pure_realloc_calloc_match_protocol(seed):
+    """pim_malloc.realloc/calloc and the protocol REALLOC/CALLOC path are
+    dual implementations of the same semantics — pin them pointer-equal."""
+    rng = random.Random(seed)
+    cfg = _cfg("sw")
+    st_h = heap.init(cfg)
+    st_p = pm.init(cfg.pm)
+    st_h, r0 = heap.step(cfg, st_h, heap.malloc_request(
+        jnp.full((T,), 100, jnp.int32)))
+    st_p, p0, _ = pm.malloc(cfg.pm, st_p, jnp.full((T,), 100, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(r0.ptr), np.asarray(p0))
+    live_h, live_p = r0.ptr, p0
+    for _ in range(8):
+        if rng.random() < 0.5:
+            sizes = jnp.array([rng.choice([0, 16, 100, 300, 3000, 8192])
+                               for _ in range(T)], jnp.int32)
+            st_h, rh = heap.step(cfg, st_h,
+                                 heap.realloc_request(live_h, sizes))
+            st_p, pp, _ = pm.realloc(cfg.pm, st_p, live_p, sizes)
+            np.testing.assert_array_equal(np.asarray(rh.ptr), np.asarray(pp))
+            live_h, live_p = rh.ptr, pp
+        else:
+            n = jnp.array([rng.randint(0, 64) for _ in range(T)], jnp.int32)
+            e = jnp.array([rng.choice([0, 16, 40]) for _ in range(T)], jnp.int32)
+            st_h, rh = heap.step(cfg, st_h, heap.calloc_request(n, e))
+            st_p, pp, _ = pm.calloc(cfg.pm, st_p, n, e)
+            np.testing.assert_array_equal(np.asarray(rh.ptr), np.asarray(pp))
+            st_h, _ = heap.step(cfg, st_h, heap.free_request(rh.ptr))
+            st_p, _ = pm.free(cfg.pm, st_p, jnp.where(pp >= 0, pp, -1))
+    np.testing.assert_array_equal(np.asarray(st_h.alloc.buddy.longest),
+                                  np.asarray(st_p.buddy.longest))
+
+
+# -------------------------------------------------------------------- calloc
+def test_calloc_size_class_rounding():
+    cfg = _cfg("sw")
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.calloc_request(
+        jnp.array([3, 64, 1, 100], jnp.int32),
+        jnp.array([40, 16, 100, 0], jnp.int32)))
+    # 3*40=120 -> 128 class; 64*16=1024 -> 1024 class; 100 -> 128; n*0 -> noop
+    assert [int(p) >= 0 for p in r0.ptr] == [True, True, True, False]
+    # prove the classes via in-place realloc up to the rounded size
+    st, r1 = heap.step(cfg, st, heap.realloc_request(
+        r0.ptr, jnp.array([128, 1024, 128, 0], jnp.int32),
+        active=jnp.array([True, True, True, False])))
+    assert not any(bool(m) for m in r1.moved)
+    np.testing.assert_array_equal(np.asarray(r1.ptr[:3]), np.asarray(r0.ptr[:3]))
+
+
+def test_calloc_overflow_fails():
+    cfg = _cfg("sw")
+    st = heap.init(cfg)
+    st, r = heap.step(cfg, st, heap.calloc_request(
+        jnp.full((T,), 1 << 20, jnp.int32), jnp.full((T,), 1 << 20, jnp.int32)))
+    assert all(int(p) == -1 for p in r.ptr)
+    assert not any(bool(x) for x in r.ok)
+
+
+# ------------------------------------------------------------ mixed-op rounds
+@pytest.mark.parametrize("kind", sysm.KINDS)
+def test_mixed_op_round(kind):
+    cfg = _cfg(kind)
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.malloc_request(
+        jnp.array([64, 256, 64, 0], jnp.int32),
+        active=jnp.array([True, True, True, False])))
+    req = heap.AllocRequest(
+        op=jnp.array([heap.OP_REALLOC, heap.OP_FREE, heap.OP_NOOP,
+                      heap.OP_MALLOC], jnp.int32),
+        size=jnp.array([8192, 0, 0, 32], jnp.int32),
+        ptr=jnp.array([int(r0.ptr[0]), int(r0.ptr[1]), -1, -1], jnp.int32))
+    st, r1 = heap.step(cfg, st, req)
+    assert bool(r1.moved[0]) and int(r1.ptr[0]) != int(r0.ptr[0])
+    assert bool(r1.ok[1]) and int(r1.ptr[1]) == -1     # freed
+    assert int(r1.path[2]) == -1                       # noop untouched
+    assert int(r1.ptr[3]) >= 0                         # malloc served
+    assert float(jnp.sum(r1.latency_cyc)) > 0
+
+
+# ------------------------------------------------------- multi-core vmap/jit
+def test_jit_vmap_step_with_realloc_compiles():
+    """Acceptance: jit(vmap(step)) for 8 cores x 16 threads incl. reallocs."""
+    C = 8
+    cfg = sysm.SystemConfig(kind="sw", heap_bytes=1 << 20, num_threads=16)
+    states = heap.multicore_init(cfg, C)
+    vstep = jax.jit(jax.vmap(functools.partial(heap.step, cfg)))
+    sizes = jnp.tile(jnp.array([16, 100, 256, 2048, 3000, 8192, 64, 64,
+                                16, 100, 256, 2048, 3000, 8192, 64, 64],
+                               jnp.int32)[None], (C, 1))
+    states, r0 = vstep(states, jax.vmap(heap.malloc_request)(sizes))
+    assert bool((r0.ptr >= 0).all())
+    states, r1 = vstep(states, jax.vmap(heap.realloc_request)(
+        r0.ptr, jnp.roll(sizes, 1, axis=1)))
+    assert r1.ptr.shape == (C, 16)
+    assert bool((r1.latency_cyc >= 0).all())
+
+
+def test_multicore_independence():
+    """Core i's requests never perturb core j's state."""
+    C = 4
+    cfg = sysm.SystemConfig(kind="sw", heap_bytes=1 << 18, num_threads=T)
+    mch = heap.MultiCoreHeap(cfg, num_cores=C)
+    baseline = jax.tree.map(lambda x: np.asarray(x), mch.state)
+
+    # only core 0 allocates; cores 1..3 are all-NOOP
+    sizes = jnp.zeros((C, T), jnp.int32).at[0].set(
+        jnp.array([64, 8192, 2048, 16], jnp.int32))
+    resp = mch.malloc(sizes)
+    assert bool((resp.ptr[0] >= 0).all())
+    assert bool((resp.ptr[1:] == -1).all())
+    changed = jax.tree.map(
+        lambda a, b: np.asarray([not np.array_equal(a[c], b[c])
+                                 for c in range(C)]),
+        baseline, mch.state)
+    flags = np.stack(jax.tree.leaves(changed))       # [n_leaves, C]
+    assert flags[:, 0].any()                         # core 0 state advanced
+    assert not flags[:, 1:].any()                    # cores 1..3 untouched
+
+    # symmetric tapes on all cores -> identical per-core pointer sequences
+    mch2 = heap.MultiCoreHeap(cfg, num_cores=C)
+    same = jnp.tile(jnp.array([16, 256, 2048, 8192], jnp.int32)[None], (C, 1))
+    r = mch2.malloc(same)
+    for c in range(1, C):
+        np.testing.assert_array_equal(np.asarray(r.ptr[0]), np.asarray(r.ptr[c]))
+
+
+# ------------------------------------------------------------------- facade
+def test_table2_facade_roundtrip():
+    from repro.core.api import initAllocator
+
+    a = initAllocator(1 << 18, num_threads=T)
+    p1 = a.pimMalloc(100)
+    p2 = a.pimCalloc(16, 16)                # 256 B class
+    assert p1 >= 0 and p2 >= 0 and p1 != p2
+    p3 = a.pimRealloc(p1, 90)               # same class: in place
+    assert p3 == p1
+    p4 = a.pimRealloc(p1, 2048)             # bigger class: moves
+    assert p4 >= 0 and p4 != p1
+    a.pimFree(p2), a.pimFree(p4)
+    st = a.stats
+    assert st["front_hits"] >= 2 and st["frees_small"] >= 3
+    assert a.last_info is not None and a.last_info.ptr.shape == (T,)
+
+
+def test_registry_covers_all_kinds():
+    assert set(heap.kinds()) == set(sysm.KINDS)

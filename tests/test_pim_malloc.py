@@ -4,7 +4,9 @@ import random
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest import hypothesis_or_skip
+
+given, settings, st = hypothesis_or_skip()
 
 from repro.core import pim_malloc as pm
 from repro.core.oracle import PyPimMalloc
