@@ -5,17 +5,29 @@ from repro.core import design_space as ds
 from .common import emit
 
 
-def run():
-    sweep = ds.sweep(n_cores_list=(1, 8, 64, 512))
+def bench(smoke: bool = False):
+    recs = []
+    n_cores = (1, 8, 64) if smoke else (1, 8, 64, 512)
+    top = n_cores[-1]
+    sweep = ds.sweep(n_cores_list=n_cores)
     for strat in ds.STRATEGIES:
         for n, r in sweep[strat].items():
-            emit(f"fig5/{strat}/cores={n}", r["total"],
-                 f"exec={r['exec']:.2f}us;xfer={r['xfer']:.2f}us")
+            recs.append(emit(
+                f"fig5/{strat}/cores={n}", r["total"],
+                f"exec={r['exec']:.2f}us;xfer={r['xfer']:.2f}us",
+                allocs_per_sec=n * 1e6 / max(r["total"], 1e-12)))
     # paper's qualitative claims
     red = sweep["pim_meta_pim_exec"]
-    flat = red[512]["total"] / red[1]["total"]
-    emit("fig5/winner_scaling_512c_vs_1c", red[512]["total"],
-         f"ratio={flat:.2f} (flat=1.0; paper: scalable)")
-    worst = max(sweep[s][512]["total"] for s in ds.STRATEGIES)
-    emit("fig5/worst_vs_winner_at_512", worst,
-         f"{worst / red[512]['total']:.0f}x slower than PIM-meta/PIM-exec")
+    flat = red[top]["total"] / red[1]["total"]
+    recs.append(emit(
+        f"fig5/winner_scaling_{top}c_vs_1c", red[top]["total"],
+        f"ratio={flat:.2f} (flat=1.0; paper: scalable)", flat_ratio=flat))
+    worst = max(sweep[s][top]["total"] for s in ds.STRATEGIES)
+    recs.append(emit(
+        f"fig5/worst_vs_winner_at_{top}", worst,
+        f"{worst / red[top]['total']:.0f}x slower than PIM-meta/PIM-exec"))
+    return recs
+
+
+def run():
+    bench()

@@ -3,17 +3,30 @@ consecutive (de)allocations; normalized to 32KB/2KB."""
 from .common import emit, micro_alloc
 
 
-def run():
+def bench(smoke: bool = False):
+    recs = []
+    rounds = 8 if smoke else 64
+    heap_logs = (15, 20) if smoke else (15, 20, 25)
     base = None
-    for heap_log in (15, 20, 25):             # 32 KB, 1 MB, 32 MB
+    for heap_log in heap_logs:                # 32 KB, 1 MB, 32 MB
         for size in (2048, 256, 32):
-            r = micro_alloc("strawman", size, nthreads=1, rounds=64,
+            r = micro_alloc("strawman", size, nthreads=1, rounds=rounds,
                             heap=1 << heap_log, alloc_free=True)
             if base is None:
                 base = r["mean_us"]
-            emit(f"fig6/heap={1 << heap_log}/alloc={size}", r["mean_us"],
-                 f"slowdown_vs_32KB_2KB={r['mean_us'] / base:.2f}x")
-    r_big = micro_alloc("strawman", 32, 1, rounds=64, heap=1 << 25,
-                        alloc_free=True)
-    emit("fig6/claim_12x_slowdown", r_big["mean_us"],
-         f"measured={r_big['mean_us'] / base:.1f}x (paper: up to 12x)")
+            recs.append(emit(
+                f"fig6/heap={1 << heap_log}/alloc={size}", r["mean_us"],
+                f"slowdown_vs_32KB_2KB={r['mean_us'] / base:.2f}x",
+                allocs_per_sec=r["allocs_per_sec"],
+                metadata_bytes_per_op=r["metadata_bytes_per_op"]))
+    r_big = micro_alloc("strawman", 32, 1, rounds=rounds,
+                        heap=1 << heap_logs[-1], alloc_free=True)
+    recs.append(emit(
+        "fig6/claim_12x_slowdown", r_big["mean_us"],
+        f"measured={r_big['mean_us'] / base:.1f}x (paper: up to 12x)",
+        slowdown=r_big["mean_us"] / base))
+    return recs
+
+
+def run():
+    bench()

@@ -10,13 +10,19 @@ from repro.core import system as sysm
 from .common import emit, micro_alloc
 
 
-def run():
-    r1 = micro_alloc("strawman", 256, nthreads=1, rounds=96)
-    r16 = micro_alloc("strawman", 256, nthreads=16, rounds=96)
-    emit("fig7/1thread_mean", r1["mean_us"],
-         f"fluctuation=p95/mean={r1['p95_us'] / r1['mean_us']:.2f}")
-    emit("fig7/16threads_mean", r16["mean_us"],
-         f"fluctuation=p95/mean={r16['p95_us'] / r16['mean_us']:.2f}")
+def bench(smoke: bool = False):
+    recs = []
+    rounds = 8 if smoke else 96
+    r1 = micro_alloc("strawman", 256, nthreads=1, rounds=rounds)
+    r16 = micro_alloc("strawman", 256, nthreads=16, rounds=rounds)
+    recs.append(emit(
+        "fig7/1thread_mean", r1["mean_us"],
+        f"fluctuation=p95/mean={r1['p95_us'] / r1['mean_us']:.2f}",
+        allocs_per_sec=r1["allocs_per_sec"]))
+    recs.append(emit(
+        "fig7/16threads_mean", r16["mean_us"],
+        f"fluctuation=p95/mean={r16['p95_us'] / r16['mean_us']:.2f}",
+        allocs_per_sec=r16["allocs_per_sec"]))
 
     # busy-wait share: recompute one round and separate queue wait from service
     cfg = sysm.SystemConfig(kind="strawman", heap_bytes=1 << 25)
@@ -26,6 +32,12 @@ def run():
     total = float(np.asarray(info.latency_cyc).sum())
     service = float(np.asarray(info.backend_cyc).sum())
     wait = total - service
-    emit("fig7/busywait_share_16t", total / 16 / 350e6 * 1e6,
-         f"lock_wait={wait / total:.0%};alloc={service / total:.0%} "
-         f"(paper Fig 7b: wait dominates)")
+    recs.append(emit(
+        "fig7/busywait_share_16t", total / 16 / 350e6 * 1e6,
+        f"lock_wait={wait / total:.0%};alloc={service / total:.0%} "
+        f"(paper Fig 7b: wait dominates)", busywait_share=wait / total))
+    return recs
+
+
+def run():
+    bench()

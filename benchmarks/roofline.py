@@ -82,24 +82,33 @@ def analyze_cell(r: dict) -> dict:
     }
 
 
-def run(markdown: bool = False):
+def bench(smoke: bool = False):
     from .common import emit
+    recs = []
     cells = [analyze_cell(r) for r in load_cells()]
     ok = [c for c in cells if c["status"] == "ok"]
     for c in sorted(ok, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
         t = c["terms"]
-        emit(
+        recs.append(emit(
             f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
             sum(t.values()) * 1e6,
             f"compute={t['compute_s']:.2e}s;mem={t['memory_s']:.2e}s;"
             f"coll={t['collective_s']:.2e}s;bound={c['bottleneck']};"
             f"useful={c['useful_flops_ratio']:.2f};"
             f"roofline_frac={c['roofline_frac']:.3f}",
-        )
+            roofline_frac=c["roofline_frac"],
+        ))
     skipped = [c for c in cells if c["status"] == "skipped"]
     errs = [c for c in cells if c["status"] == "error"]
-    emit("roofline/summary", 0.0,
-         f"ok={len(ok)};skipped={len(skipped)};error={len(errs)}")
+    recs.append(emit(
+        "roofline/summary", 0.0,
+        f"ok={len(ok)};skipped={len(skipped)};error={len(errs)}",
+        cells_ok=len(ok), cells_error=len(errs)))
+    return recs
+
+
+def run(markdown: bool = False):
+    bench()
 
 
 def markdown_table():

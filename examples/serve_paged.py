@@ -4,8 +4,9 @@
 
 Thin wrapper over the production driver (launch/serve.py) at smoke scale.
 Page extents come from the unified heap API (PagePool -> Table-2 facade ->
-heap.step); the attention impl is threaded through ArchConfig.attend_impl
-(no module globals).
+heap.step); decode-time page growth routes through a 2-rank ShardedHeap
+fleet (the shard_map tier + FleetRouter accounting); the attention impl is
+threaded through ArchConfig.attend_impl (no module globals).
 """
 import sys
 
@@ -14,5 +15,5 @@ from repro.launch import serve
 if __name__ == "__main__":
     sys.argv = [sys.argv[0], "--arch", "granite_3_8b", "--reduced",
                 "--batch", "4", "--prompt-len", "32", "--decode-steps", "48",
-                "--impl", "kernel"]
+                "--impl", "kernel", "--fleet-ranks", "2"]
     serve.main()

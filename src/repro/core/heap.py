@@ -14,8 +14,9 @@ requires:
 
   * one PIM core      : ``jax.jit(partial(heap.step, cfg))``
   * C cores, one rank : ``jax.vmap`` — see :class:`MultiCoreHeap`
-  * a mesh of ranks   : ``shard_map`` of the vmapped step (metadata never
-    leaves a core — the PIM-Metadata/PIM-Executed placement of Fig 5)
+  * a mesh of ranks   : ``shard_map`` of the vmapped step — see
+    :class:`ShardedHeap` (metadata never leaves a core OR a rank — the
+    PIM-Metadata/PIM-Executed placement of Fig 5 at fleet scale)
 
 Backends register through :func:`register`; the implementations live in
 ``repro.core.system`` (cost-model instrumented) on top of the functional
@@ -223,7 +224,8 @@ class MultiCoreHeap:
     The whole PIM system is literally `jit(vmap(step))` — core i's requests
     can never perturb core j's state because the states are disjoint slices
     of one stacked pytree. A TPU-mesh deployment shard_maps this same step
-    over the core axis (see repro.launch).
+    over a rank axis on top (see :class:`ShardedHeap` and
+    `repro.launch.fleet`).
     """
 
     def __init__(self, cfg, num_cores: int, prepopulate: bool = True):
@@ -250,3 +252,100 @@ class MultiCoreHeap:
         return self.step(jax.vmap(free_request)(
             jnp.asarray(ptrs, jnp.int32),
             None if active is None else jnp.asarray(active, bool)))
+
+
+# ---------------------------------------------------------------------------
+# fleet tier: shard_map over a rank mesh
+# ---------------------------------------------------------------------------
+def sharded_init(cfg, num_ranks: int, num_cores: int, prepopulate: bool = True):
+    """Stacked fleet state: every leaf gains leading [R, C] axes."""
+    st = multicore_init(cfg, num_cores, prepopulate=prepopulate)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_ranks,) + x.shape), st)
+
+
+def sharded_step(cfg, states, requests: AllocRequest):
+    """vmap of `multicore_step` over the rank axis: requests are [R, C, T].
+
+    This is the per-device body a ShardedHeap shard_maps over the rank axis;
+    on its own it is the single-device fallback (identical results)."""
+    return jax.vmap(functools.partial(multicore_step, cfg))(states, requests)
+
+
+class ShardedHeap:
+    """R ranks x C cores of independent heaps behind one [R, C, T] entry point.
+
+    The third tier of the transform stack: ``shard_map`` (over a 1-D
+    ``jax.sharding.Mesh`` of ranks) of the vmapped :func:`step`. Rank shards
+    hold disjoint slices of one stacked state pytree, so metadata never
+    crosses a core OR a rank boundary — the paper's PIM-Metadata /
+    PIM-Executed placement at fleet scale (2560-DPU claim, Fig 5). The heap
+    state argument is donated to the jitted step, so per-round updates reuse
+    the state buffers in place instead of an O(heap) copy per protocol round
+    (backends without donation, e.g. CPU, silently fall back to copying).
+
+    ``mesh=None`` builds a 1-D mesh over the local devices (1-device on CPU
+    CI — the whole path still compiles through shard_map); ``mesh=False``
+    skips shard_map entirely and runs the pure vmap fallback. Both must be
+    bitwise-identical to :class:`MultiCoreHeap` per (rank, core) — pinned in
+    tests/test_sharded_heap.py.
+    """
+
+    def __init__(self, cfg, num_ranks: int, num_cores: int, mesh=None,
+                 axis_name: str = "ranks", prepopulate: bool = True,
+                 donate: bool = True):
+        self.cfg = cfg
+        self.num_ranks = num_ranks
+        self.num_cores = num_cores
+        self.state = sharded_init(cfg, num_ranks, num_cores,
+                                  prepopulate=prepopulate)
+        inner = functools.partial(sharded_step, cfg)
+        if mesh is None:
+            from repro.parallel.meshctx import make_rank_mesh
+            mesh = make_rank_mesh(num_ranks, axis_name)
+        if mesh is False:
+            self.mesh = None
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec
+            axis_name = mesh.axis_names[0]
+            if num_ranks % mesh.shape[axis_name]:
+                raise ValueError(
+                    f"num_ranks={num_ranks} not divisible by mesh axis "
+                    f"{axis_name}={mesh.shape[axis_name]}")
+            spec = PartitionSpec(axis_name)
+            inner = shard_map(inner, mesh=mesh, in_specs=(spec, spec),
+                              out_specs=(spec, spec), check_rep=False)
+            self.mesh = mesh
+        self.donate = donate
+        self._step = jax.jit(inner, donate_argnums=(0,) if donate else ())
+
+    @property
+    def num_threads(self) -> int:
+        return self.cfg.num_threads
+
+    @property
+    def shape(self) -> tuple:
+        """(R, C, T): one slot per hardware thread in the fleet."""
+        return (self.num_ranks, self.num_cores, self.cfg.num_threads)
+
+    def step(self, request: AllocRequest) -> AllocResponse:
+        """Serve a [R, C, T] request batch; advances the sharded state."""
+        self.state, resp = self._step(self.state, request)
+        return resp
+
+    def _vv(self, build, *args):
+        return self.step(jax.vmap(jax.vmap(build))(*args))
+
+    def malloc(self, sizes, active=None) -> AllocResponse:
+        return self._vv(malloc_request, jnp.asarray(sizes, jnp.int32),
+                        None if active is None else jnp.asarray(active, bool))
+
+    def free(self, ptrs, active=None) -> AllocResponse:
+        return self._vv(free_request, jnp.asarray(ptrs, jnp.int32),
+                        None if active is None else jnp.asarray(active, bool))
+
+    def realloc(self, ptrs, sizes, active=None) -> AllocResponse:
+        return self._vv(realloc_request, jnp.asarray(ptrs, jnp.int32),
+                        jnp.asarray(sizes, jnp.int32),
+                        None if active is None else jnp.asarray(active, bool))

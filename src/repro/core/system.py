@@ -35,8 +35,8 @@ from .buddy import BuddyConfig, BuddyState, ilog2, next_pow2
 from .buddy_cache import (BuddyCacheConfig, SWBufferConfig, buddy_cache_access,
                           buddy_cache_init, sw_buffer_access, sw_buffer_init)
 from .cost_model import DPUCost
-from .heap import (OP_CALLOC, OP_FREE, OP_MALLOC, OP_REALLOC, AllocRequest,
-                   AllocResponse)
+from .heap import (OP_CALLOC, OP_FREE, OP_MALLOC, OP_NOOP, OP_REALLOC,
+                   AllocRequest, AllocResponse)
 from .pim_malloc import INVALID, PimMallocConfig
 
 KINDS = ("strawman", "sw", "hwsw")
@@ -365,6 +365,38 @@ def _round_info(resp: AllocResponse) -> RoundInfo:
     return RoundInfo(latency_cyc=resp.latency_cyc, path=resp.path,
                      meta_hits=resp.meta_hits, meta_misses=resp.meta_misses,
                      dram_bytes=resp.dram_bytes, backend_cyc=resp.backend_cyc)
+
+
+def fleet_accounting(req: AllocRequest, resp: AllocResponse) -> dict:
+    """Cost-model accounting of one batched protocol round.
+
+    Works on any leading batch shape; with [R, C, T] leaves (a ShardedHeap
+    round) the `per_rank` lists break totals down by rank — the fleet-level
+    numbers a router reports per round. Fleet totals are exact sums of the
+    per-rank entries (pinned in tests/test_sharded_heap.py).
+    """
+    import numpy as np
+    op = np.asarray(req.op)
+    active = op != OP_NOOP
+    lat = np.asarray(resp.latency_cyc)
+    out = {
+        "ops": int(active.sum()),
+        "ok": int(np.asarray(resp.ok).sum()),
+        "latency_cyc": float(lat.sum()),
+        "max_latency_cyc": float(lat.max()) if lat.size else 0.0,
+        "backend_cyc": float(np.asarray(resp.backend_cyc).sum()),
+        "meta_hits": int(np.asarray(resp.meta_hits).sum()),
+        "meta_misses": int(np.asarray(resp.meta_misses).sum()),
+        "dram_bytes": int(np.asarray(resp.dram_bytes).sum()),
+    }
+    if op.ndim >= 3:  # [R, ...]: per-rank breakdown over the leading axis
+        rest = tuple(range(1, op.ndim))
+        out["per_rank"] = {
+            "ops": active.sum(axis=rest).tolist(),
+            "latency_cyc": lat.sum(axis=rest).tolist(),
+            "dram_bytes": np.asarray(resp.dram_bytes).sum(axis=rest).tolist(),
+        }
+    return out
 
 
 def malloc_round(cfg: SystemConfig, st: SystemState, sizes, active=None):

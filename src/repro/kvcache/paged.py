@@ -138,13 +138,11 @@ def attend(q, k_pages, v_pages, page_table, seq_lens, impl: str = "ref"):
 
 
 def _ambient_mesh():
-    """The mesh set via jax.set_mesh (jax >= 0.8); None when absent."""
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if not mesh.empty and "model" in mesh.axis_names:
-            return mesh
-    except Exception:
-        pass
+    """The active mesh when it has a 'model' axis; None otherwise."""
+    from repro.parallel.meshctx import ambient_mesh
+    mesh = ambient_mesh()
+    if mesh is not None and "model" in mesh.axis_names:
+        return mesh
     return None
 
 

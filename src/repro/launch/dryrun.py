@@ -32,6 +32,7 @@ from repro.models import registry
 from repro.models.config import SHAPES
 from repro.optim.adamw import AdamWConfig
 from repro.parallel import sharding
+from repro.parallel.meshctx import activate_mesh
 
 RESULTS_DIR = "results/dryrun"
 
@@ -104,7 +105,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     t0 = time.time()
     nm_ = lambda spec: sharding.named(mesh, spec)
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         if shape.kind == "train":
             opt_cfg = AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
             nm = (n_micro or cfg.train_microbatches
@@ -171,7 +172,7 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     # ----- cost analysis (raw; while bodies counted once) -------------------
     try:
-        ca = compiled.cost_analysis()
+        ca = hlo_analysis.cost_analysis_dict(compiled)
         result["cost_analysis_raw"] = {
             k: float(v) for k, v in ca.items()
             if k in ("flops", "bytes accessed", "transcendentals")

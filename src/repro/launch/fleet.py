@@ -1,0 +1,121 @@
+"""Fleet-level request router over a ShardedHeap.
+
+The deployment story of the scaling claim: a service front-end holds a flat
+stream of allocation requests; the router scatters them onto the fleet's
+fixed [R ranks, C cores, T threads] protocol grid (NOOP-padding the empty
+slots), drives one donated `ShardedHeap.step` per round, gathers the
+responses back into request order, and accumulates the DPU cost model's
+accounting fleet-wide and per rank.
+
+    heap = ShardedHeap(cfg, num_ranks=R, num_cores=C)
+    router = FleetRouter(heap)
+    resp = router.route(request_RCT)          # pre-batched [R, C, T] round
+    out = router.route_flat(op, size, ptr)    # flat stream, any N <= R*C*T
+    router.stats                              # totals + per-rank breakdown
+
+Placement is slot-order (row-major over ranks, then cores, then threads):
+request i lands on rank i // (C*T) — contiguous chunks per rank, matching
+how a rank-of-ranks management layer (SimplePIM-style) hands work to DPUs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import heap as heap_api
+from repro.core import system as sysm
+from repro.core.heap import AllocRequest, AllocResponse
+
+
+def scatter_flat(op, size, ptr, shape: tuple) -> AllocRequest:
+    """Flat per-request arrays (length N <= R*C*T) -> one [R, C, T] round.
+
+    Unfilled slots become NOOPs; slot order is row-major, so `gather_flat`
+    with the same N is the exact inverse.
+    """
+    R, C, T = shape
+    total = R * C * T
+    op = np.asarray(op, np.int32)
+    n = op.shape[0]
+    if n > total:
+        raise ValueError(f"{n} requests > fleet capacity {total} ({shape})")
+
+    def pad(x, fill):
+        x = np.asarray(x, np.int32)
+        out = np.full((total,), fill, np.int32)
+        out[:n] = x
+        return jnp.asarray(out.reshape(R, C, T))
+
+    return AllocRequest(op=pad(op, heap_api.OP_NOOP), size=pad(size, 0),
+                        ptr=pad(ptr, -1))
+
+
+def gather_flat(resp: AllocResponse, n: int) -> dict:
+    """[R, C, T] response -> flat arrays in the original request order."""
+    return {f: np.asarray(getattr(resp, f)).reshape(-1)[:n]
+            for f in AllocResponse._fields}
+
+
+class FleetRouter:
+    """Scatter/step/gather driver + cost accounting for one ShardedHeap."""
+
+    def __init__(self, heap: heap_api.ShardedHeap):
+        self.heap = heap
+        self.rounds = 0
+        self.totals = {k: 0.0 for k in
+                       ("ops", "ok", "latency_cyc", "backend_cyc",
+                        "meta_hits", "meta_misses", "dram_bytes")}
+        self.per_rank_latency_cyc = np.zeros(heap.num_ranks)
+        self.per_rank_ops = np.zeros(heap.num_ranks, np.int64)
+        self.per_rank_dram_bytes = np.zeros(heap.num_ranks, np.int64)
+
+    @property
+    def shape(self) -> tuple:
+        return self.heap.shape
+
+    @property
+    def capacity(self) -> int:
+        """Requests servable per round: one per fleet hardware thread."""
+        R, C, T = self.shape
+        return R * C * T
+
+    def route(self, request: AllocRequest) -> AllocResponse:
+        """Serve one pre-batched [R, C, T] round and account for it."""
+        resp = self.heap.step(request)
+        acct = sysm.fleet_accounting(request, resp)
+        self.rounds += 1
+        for k in self.totals:
+            self.totals[k] += acct[k]
+        pr = acct.get("per_rank")
+        if pr:
+            self.per_rank_latency_cyc += np.asarray(pr["latency_cyc"])
+            self.per_rank_ops += np.asarray(pr["ops"], np.int64)
+            self.per_rank_dram_bytes += np.asarray(pr["dram_bytes"], np.int64)
+        return resp
+
+    def route_flat(self, op, size, ptr) -> dict:
+        """Serve a flat request stream; returns flat response arrays + the
+        full AllocResponse under 'resp'."""
+        n = np.asarray(op).shape[0]
+        resp = self.route(scatter_flat(op, size, ptr, self.shape))
+        out = gather_flat(resp, n)
+        out["resp"] = resp
+        return out
+
+    @property
+    def stats(self) -> dict:
+        """Accumulated fleet accounting across all routed rounds."""
+        freq = self.heap.cfg.dpu.freq_hz
+        ops = max(self.totals["ops"], 1)
+        return {
+            "rounds": self.rounds,
+            **{k: (int(v) if k not in ("latency_cyc", "backend_cyc")
+                   else float(v)) for k, v in self.totals.items()},
+            "us_per_op": self.totals["latency_cyc"] / ops / freq * 1e6,
+            "dram_bytes_per_op": self.totals["dram_bytes"] / ops,
+            "per_rank": {
+                "ops": self.per_rank_ops.tolist(),
+                "latency_cyc": self.per_rank_latency_cyc.tolist(),
+                "dram_bytes": self.per_rank_dram_bytes.tolist(),
+            },
+        }

@@ -78,6 +78,17 @@ def _shape_elems(shape_str: str) -> int:
     return n
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """`compiled.cost_analysis()` as one flat dict across jax versions.
+
+    jax <= 0.4.x returns a one-element list of per-program dicts; newer
+    versions return the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 class Instruction:
     __slots__ = ("name", "shape_str", "op", "line")
 
@@ -189,8 +200,19 @@ def _dot_flops(ins: Instruction, symtab) -> float:
     out_dims = _shape_dims(ins.shape_str)
     if out_dims is None:
         return 0.0
-    m = re.search(r"\w+\((%[\w.\-]+),", ins.line)
-    lhs_dims = symtab.get(m.group(1)) if m else None
+    # lhs operand: either typed ('dot(f32[32,64]{1,0} %x, ...)' — read dims
+    # straight off the annotation) or bare ('dot(%x, ...)' — symtab lookup).
+    # Split at the op's own paren: the result layout may contain parens too
+    # (TPU tiling, 'f32[64,128]{1,0:T(8,128)}').
+    parts = ins.line.split(ins.op + "(", 1)
+    if len(parts) < 2:
+        return 0.0
+    args = parts[1]
+    m = re.match(r"\s*(?:(\w+\[[\d,]*\])\S*\s+)?(%[\w.\-]+)", args)
+    lhs_dims = None
+    if m:
+        lhs_dims = (_shape_dims(m.group(1)) if m.group(1)
+                    else symtab.get(m.group(2)))
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
     contracted = 1
     if lhs_dims and cm and cm.group(1):

@@ -8,7 +8,10 @@ Demonstrates the paper's technique as the serving substrate:
     (bypass path — large contiguous allocation),
   * per-token page growth is served by the THREAD-CACHE FRONTEND (O(1)),
   * attention consumes the resulting page tables (Pallas kernel on the
-    single-device path, GSPMD 'ref' path inside pjit).
+    single-device path, GSPMD 'ref' path inside pjit),
+  * with --fleet-ranks R, decode-time page growth routes through a
+    ShardedHeap fleet (shard_map tier): sequence b lands on rank b % R,
+    and the run reports the FleetRouter's per-rank cost accounting.
 """
 from __future__ import annotations
 
@@ -21,8 +24,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.core import heap as heap_api
+from repro.core import system as sysm
 from repro.kvcache import paged
+from repro.launch.fleet import FleetRouter
 from repro.models import registry
+
+
+def make_fleet_pool(num_ranks: int, n_pages: int, num_threads: int = 16,
+                    kind: str = "sw") -> FleetRouter:
+    """A FleetRouter over R single-core page-heap ranks (serving fleet).
+
+    Each rank owns an independent page heap of `n_pages`; page ids are
+    rank-local, mirroring one PagePool per device shard.
+    """
+    cfg = sysm.SystemConfig(kind=kind, heap_bytes=n_pages * paged.PAGE_UNIT,
+                            num_threads=num_threads)
+    return FleetRouter(heap_api.ShardedHeap(cfg, num_ranks=num_ranks,
+                                            num_cores=1))
+
+
+def fleet_page_request(router: FleetRouter, need) -> heap_api.AllocRequest:
+    """One fleet round allocating a page for every sequence with need[b]."""
+    R, C, T = router.shape
+    size = np.zeros((R, C, T), np.int32)
+    for b in np.nonzero(np.asarray(need))[0]:
+        rank, slot = int(b) % R, int(b) // R
+        if slot >= C * T:
+            raise ValueError(f"sequence {b} exceeds fleet thread capacity "
+                             f"{router.capacity} ({R}x{C}x{T})")
+        size[rank, slot // T, slot % T] = paged.PAGE_UNIT
+    return heap_api.malloc_request(jnp.asarray(size))
 
 
 def main():
@@ -33,6 +65,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=48)
     ap.add_argument("--impl", default="kernel", choices=["kernel", "ref"])
+    ap.add_argument("--fleet-ranks", type=int, default=0,
+                    help="route decode page growth through a ShardedHeap "
+                         "fleet of this many ranks (0 = single PagePool)")
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -53,6 +88,17 @@ def main():
     # floor: the hierarchy needs headroom beyond thread-cache prepopulation
     n_pages = max(1 << (B * P - 1).bit_length(), 1 << 16)
     pool = paged.PagePool(n_pages=n_pages)
+    router = (make_fleet_pool(args.fleet_ranks, n_pages,
+                              num_threads=pool.cfg.num_threads)
+              if args.fleet_ranks else None)
+    if router is None and B > pool.cfg.num_threads:
+        raise SystemExit(
+            f"--batch {B} exceeds the single pool's {pool.cfg.num_threads} "
+            "hardware threads; use --fleet-ranks to scale page allocation")
+    if router is not None and B > router.capacity:
+        raise SystemExit(
+            f"--batch {B} exceeds the fleet's {router.capacity} hardware "
+            "threads; raise --fleet-ranks")
     page_rows = []
     for b in range(B):
         pages = pool.alloc_pages(P, thread=b % pool.cfg.num_threads)
@@ -97,8 +143,11 @@ def main():
         pos = np.asarray(cache["seq_lens"])
         need = (pos % cfg.page_size) == 0
         if need.any():
-            ids, resp = pool.alloc_page_batch(
-                np.pad(need, (0, pool.cfg.num_threads - B)))
+            if router is not None:
+                resp = router.route(fleet_page_request(router, need))
+            else:
+                ids, resp = pool.alloc_page_batch(
+                    np.pad(need, (0, pool.cfg.num_threads - B)))
             n_page_allocs += int(need.sum())
             alloc_cyc += float(np.asarray(resp.latency_cyc).max())
         cache, logits = decode(params, cache, {"tokens": toks})
@@ -111,6 +160,11 @@ def main():
     print(f"frontend page allocations during decode: {n_page_allocs} "
           f"({alloc_us:.2f} us modeled DPU time)")
     print("final allocator stats:", pool.stats)
+    if router is not None:
+        st = router.stats
+        print(f"fleet ({args.fleet_ranks} ranks): {st['rounds']} rounds, "
+              f"{st['ops']} page allocs, {st['us_per_op']:.3f} us/op, "
+              f"per-rank ops={st['per_rank']['ops']}")
 
 
 if __name__ == "__main__":

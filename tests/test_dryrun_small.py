@@ -42,7 +42,7 @@ with mesh:
                       ).lower(p_sds, o_sds, b_sds)
     compiled = lowered.compile()
 res = hlo_analysis.analyze(compiled.as_text())
-ca = compiled.cost_analysis()
+ca = hlo_analysis.cost_analysis_dict(compiled)
 print(json.dumps({
     "flops_scaled": res["flops_scaled"],
     "flops_raw": float(ca["flops"]),

@@ -24,7 +24,7 @@ def test_dot_flops_match_cost_analysis_unrolled():
     c = _compile(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
                  jax.ShapeDtypeStruct((128, 128), jnp.float32))
     res = H.analyze(c.as_text())
-    ca = c.cost_analysis()
+    ca = H.cost_analysis_dict(c)
     assert res["flops_scaled"] == pytest.approx(ca["flops"], rel=0.01)
 
 
