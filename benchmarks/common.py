@@ -23,17 +23,24 @@ from repro.core import system as sysm
 ROWS = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "", **metrics) -> dict:
+def emit(name: str, us_per_call: float, derived: str = "",
+         backend: str = None, **metrics) -> dict:
     """Print one `name,us_per_call,derived` CSV row; return the record.
 
     Extra keyword metrics land in the record as numbers (allocs_per_sec,
-    metadata_bytes_per_op, ...) for the JSON artifact.
+    metadata_bytes_per_op, ...) for the JSON artifact. Every record is
+    stamped with the jax version, and — when the row measures a specific
+    allocator design point — with its ``backend`` name
+    (strawman/sw/hwsw/pallas), so baseline diffs stay attributable across
+    environments and backend axes.
     """
     row = f"{name},{us_per_call:.4f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
     rec = {"name": name, "us_per_call": float(us_per_call),
-           "derived": str(derived)}
+           "derived": str(derived), "jax": jax.__version__}
+    if backend is not None:
+        rec["backend"] = str(backend)
     for k, v in metrics.items():
         rec[k] = float(v) if isinstance(v, numbers.Number) else v
     return rec

@@ -10,31 +10,52 @@ from repro.core import buddy_cache, system as sysm
 from .common import emit, micro_alloc
 
 
+def _cache_cell(kind, cache_bytes, rounds):
+    """One (kind, cache size) cell; the hwsw sim path and the fused-kernel
+    path share this loop, so the sweep exercises both designs."""
+    cfg = sysm.SystemConfig(
+        kind=kind, heap_bytes=1 << 25,
+        bc=buddy_cache.BuddyCacheConfig(n_entries=cache_bytes // 4))
+    st = sysm.system_init(cfg)
+    sz = jnp.tile(jnp.full((16,), 4096, jnp.int32)[None], (rounds, 1))
+    run_fn = jax.jit(lambda s, z: sysm.run_alloc_rounds(cfg, s, z))
+    st, ptrs, infos = run_fn(st, sz)
+    us = float(np.asarray(infos.latency_cyc).mean() / 350e6 * 1e6)
+    hits = int(np.asarray(infos.meta_hits).sum())
+    misses = int(np.asarray(infos.meta_misses).sum())
+    dram = int(np.asarray(infos.dram_bytes).sum())
+    return us, hits / max(hits + misses, 1), dram / (rounds * 16)
+
+
 def bench(smoke: bool = False):
     recs = []
     rounds = 8 if smoke else 96
     cache_sizes = (16, 64) if smoke else (16, 32, 64, 128, 256)
     sw = micro_alloc("sw", 4096, nthreads=16, rounds=rounds)
-    recs.append(emit("fig15/sw_baseline", sw["mean_us"], "",
+    recs.append(emit("fig15/sw_baseline", sw["mean_us"], "", backend="sw",
                      allocs_per_sec=sw["allocs_per_sec"]))
     for cache_bytes in cache_sizes:
-        cfg = sysm.SystemConfig(
-            kind="hwsw", heap_bytes=1 << 25,
-            bc=buddy_cache.BuddyCacheConfig(n_entries=cache_bytes // 4))
-        st = sysm.system_init(cfg)
-        sz = jnp.tile(jnp.full((16,), 4096, jnp.int32)[None], (rounds, 1))
-        run_fn = jax.jit(lambda s, z: sysm.run_alloc_rounds(cfg, s, z))
-        st, ptrs, infos = run_fn(st, sz)
-        us = float(np.asarray(infos.latency_cyc).mean() / 350e6 * 1e6)
-        hits = int(np.asarray(infos.meta_hits).sum())
-        misses = int(np.asarray(infos.meta_misses).sum())
-        dram = int(np.asarray(infos.dram_bytes).sum())
-        hr = hits / max(hits + misses, 1)
+        us, hr, meta = _cache_cell("hwsw", cache_bytes, rounds)
         recs.append(emit(
             f"fig15/cache={cache_bytes}B", us,
             f"speedup_vs_sw={sw['mean_us'] / us:.2f}x;hit_rate={hr:.2f}",
-            hit_rate=hr, speedup_vs_sw=sw["mean_us"] / us,
-            metadata_bytes_per_op=dram / (rounds * 16)))
+            backend="hwsw", hit_rate=hr, speedup_vs_sw=sw["mean_us"] / us,
+            metadata_bytes_per_op=meta))
+        # same sweep (same rounds) on the kernel path: the in-kernel LRU is
+        # bitwise-conformant in interpret mode (exactly equal cells); on a
+        # TPU the compiled kernel may differ by float ulps, so guard with
+        # the same tolerance band fig14's parity row uses
+        us_k, hr_k, meta_k = _cache_cell("pallas", cache_bytes, rounds)
+        close = all(abs(a - b) <= 1e-3 * max(abs(b), 1e-9)
+                    for a, b in ((us_k, us), (hr_k, hr), (meta_k, meta)))
+        if not close:
+            raise AssertionError(
+                f"pallas/hwsw fig15 cell diverged at {cache_bytes}B: "
+                f"{(us_k, hr_k, meta_k)} != {(us, hr, meta)}")
+        recs.append(emit(
+            f"fig15/pallas/cache={cache_bytes}B", us_k,
+            f"hit_rate={hr_k:.2f} (in-kernel LRU == hwsw sim)",
+            backend="pallas", hit_rate=hr_k, metadata_bytes_per_op=meta_k))
     recs.append(emit(
         "fig15/claim", 0.0,
         "paper: speedup and hit rate saturate at 64B (=256 nodes at 2b)"))

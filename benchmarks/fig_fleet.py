@@ -105,7 +105,7 @@ def bench(smoke: bool = False):
             recs.append(emit(
                 f"fig_fleet/sw/ranks={R}/cores={C}", r["us_per_call"],
                 f"eff={eff:.2f};lat_ratio={flat:.2f};"
-                f"wall_step={r['wall_us_per_step']:.0f}us",
+                f"wall_step={r['wall_us_per_step']:.0f}us", backend="sw",
                 allocs_per_sec=r["allocs_per_sec"],
                 metadata_bytes_per_op=r["metadata_bytes_per_op"],
                 scaling_efficiency=eff, latency_ratio_vs_1x1=flat,
@@ -122,7 +122,7 @@ def bench(smoke: bool = False):
     r = _cell("sw", R, C, T, rounds, mix="mixed")
     recs.append(emit(
         f"fig_fleet/sw_mixed/ranks={R}/cores={C}", r["us_per_call"],
-        f"allocs_per_sec={r['allocs_per_sec']:.0f}",
+        f"allocs_per_sec={r['allocs_per_sec']:.0f}", backend="sw",
         allocs_per_sec=r["allocs_per_sec"],
         metadata_bytes_per_op=r["metadata_bytes_per_op"]))
 
@@ -133,7 +133,19 @@ def bench(smoke: bool = False):
     recs.append(emit(
         f"fig_fleet/contention/ranks={R}/cores={C}", straw["us_per_call"],
         f"strawman_vs_sw={slow:.1f}x (shared mutex vs per-thread caches)",
-        slowdown_vs_sw=slow))
+        backend="strawman", slowdown_vs_sw=slow))
+
+    # fused-kernel backend at fleet scale: the same router/mesh path with
+    # heap.step served by one pallas_call per core (vmap -> kernel grid)
+    Rk, Ck = (ranks_list[0], cores_list[-1])
+    rk = _cell("pallas", Rk, Ck, T, max(rounds // 3, 2))
+    recs.append(emit(
+        f"fig_fleet/pallas/ranks={Rk}/cores={Ck}", rk["us_per_call"],
+        f"allocs_per_sec={rk['allocs_per_sec']:.0f};"
+        f"wall_step={rk['wall_us_per_step']:.0f}us", backend="pallas",
+        allocs_per_sec=rk["allocs_per_sec"],
+        metadata_bytes_per_op=rk["metadata_bytes_per_op"],
+        wall_us_per_step=rk["wall_us_per_step"]))
     return recs
 
 

@@ -1,0 +1,152 @@
+"""CI perf-regression gate: diff a bench-smoke JSON against the committed
+baseline (`BENCH_BASELINE.json`, schema ``pim-malloc-bench/v1``).
+
+    PYTHONPATH=src python benchmarks/perf_gate.py bench_smoke.json \
+        [--baseline BENCH_BASELINE.json] [--fail-over 0.20] [--warn-over 0.05]
+
+Every baseline record with a positive ``us_per_call`` is a *tracked row*
+(the modeled latencies are deterministic functions of the cost model, so
+they are stable across runner machines; wall-clock metrics such as
+``wall_us_per_step`` are never gated). The gate
+
+  * FAILS (exit 1) when any tracked row regresses by more than
+    ``--fail-over`` (default +20% us_per_call),
+  * WARNS on regressions above ``--warn-over`` (default +5%) and on
+    tracked rows missing from the current run,
+  * reports improvements and newly appearing rows informationally,
+
+and writes the delta table as GitHub-flavored markdown to
+``$GITHUB_STEP_SUMMARY`` when that env var is set (always to stdout).
+Refreshing the baseline after an intentional perf change is documented in
+benchmarks/README.md ("Perf gate & baseline refresh").
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA = "pim-malloc-bench/v1"
+
+
+def load_rows(path: str) -> dict:
+    """{record name: record} for every ok-figure record in a bench doc."""
+    rows, _ = load_rows_and_errors(path)
+    return rows
+
+
+def load_rows_and_errors(path: str):
+    """(rows, errored-figure dict) — errored figures carry no usable rows,
+    and a gate run must treat them as failures, not as missing rows."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise SystemExit(f"{path}: schema != {SCHEMA}")
+    rows, errors = {}, {}
+    for fig, cell in doc.get("figs", {}).items():
+        if cell.get("status") != "ok":
+            errors[fig] = cell.get("error", "status != ok")
+            continue
+        for rec in cell.get("records", []):
+            rows[rec["name"]] = rec
+    return rows, errors
+
+
+def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float):
+    """Compare tracked rows; returns (entries, failures, warnings).
+
+    entries: (name, base_us, cur_us, delta, verdict) sorted worst-first;
+    delta is None for missing/new rows.
+    """
+    entries, failures, warnings = [], [], []
+    tracked = {n: r for n, r in base.items() if r.get("us_per_call", 0) > 0}
+    for name, brec in sorted(tracked.items()):
+        b = float(brec["us_per_call"])
+        crec = cur.get(name)
+        if crec is None:
+            warnings.append(f"tracked row disappeared: {name}")
+            entries.append((name, b, None, None, "missing"))
+            continue
+        c = float(crec["us_per_call"])
+        delta = c / b - 1.0
+        if delta > fail_over:
+            verdict = "FAIL"
+            failures.append(f"{name}: {b:.4f} -> {c:.4f} us "
+                            f"(+{delta * 100:.1f}% > {fail_over * 100:.0f}%)")
+        elif delta > warn_over:
+            verdict = "warn"
+            warnings.append(f"{name}: +{delta * 100:.1f}%")
+        else:
+            verdict = "ok"
+        entries.append((name, b, c, delta, verdict))
+    for name in sorted(set(cur) - set(base)):
+        entries.append((name, None,
+                        float(cur[name].get("us_per_call", 0.0)), None, "new"))
+    entries.sort(key=lambda e: (-(e[3] if e[3] is not None else -1e9), e[0]))
+    return entries, failures, warnings
+
+
+def markdown_table(entries, limit: int = 40) -> str:
+    lines = ["| row | baseline us | current us | delta | verdict |",
+             "|---|---|---|---|---|"]
+    for name, b, c, d, v in entries[:limit]:
+        bs = f"{b:.4f}" if b is not None else "—"
+        cs = f"{c:.4f}" if c is not None else "—"
+        ds = f"{d * 100:+.1f}%" if d is not None else "—"
+        mark = {"FAIL": "❌", "warn": "⚠️", "missing": "⚠️",
+                "new": "🆕", "ok": ""}.get(v, "")
+        lines.append(f"| `{name}` | {bs} | {cs} | {ds} | {mark} {v} |")
+    if len(entries) > limit:
+        lines.append(f"| … {len(entries) - limit} more rows … | | | | |")
+    return "\n".join(lines)
+
+
+def run_gate(current_path: str, baseline_path: str, fail_over: float,
+             warn_over: float, summary_path: str = None) -> int:
+    base = load_rows(baseline_path)
+    cur, cur_errors = load_rows_and_errors(current_path)
+    entries, failures, warnings = diff_rows(base, cur, fail_over, warn_over)
+    # a figure that errored in the current run is a hard failure: its
+    # tracked rows would otherwise all degrade to "missing" warnings and
+    # a catastrophically broken run would read as a pass
+    for fig, err in sorted(cur_errors.items()):
+        failures.append(f"figure {fig} errored in the current run: {err}")
+    n_tracked = sum(1 for e in entries if e[4] != "new")
+    verdict = "FAILED" if failures else "passed"
+    report = [
+        f"## Perf gate {verdict}",
+        f"{n_tracked} tracked rows vs `{os.path.basename(baseline_path)}` "
+        f"(fail > +{fail_over * 100:.0f}%, warn > +{warn_over * 100:.0f}% "
+        "modeled us_per_call)", "",
+        markdown_table(entries), "",
+    ]
+    if failures:
+        report += ["**Regressions over threshold:**"] + \
+            [f"- {f}" for f in failures] + [""]
+    if warnings:
+        report += ["**Warnings:**"] + [f"- {w}" for w in warnings] + [""]
+    text = "\n".join(report)
+    print(text)
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(text + "\n")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="bench JSON of this run (bench_smoke.json)")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(os.path.dirname(
+                        os.path.abspath(__file__))), "BENCH_BASELINE.json"))
+    ap.add_argument("--fail-over", type=float, default=0.20,
+                    help="fail when us_per_call regresses past this fraction")
+    ap.add_argument("--warn-over", type=float, default=0.05)
+    args = ap.parse_args(argv)
+    return run_gate(args.current, args.baseline, args.fail_over,
+                    args.warn_over, os.environ.get("GITHUB_STEP_SUMMARY"))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

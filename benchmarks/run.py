@@ -26,6 +26,9 @@ import time
 ALL = ("fig5", "fig6", "fig7", "fig14", "fig15", "fig16", "fig_fleet",
        "roofline")
 SCHEMA = "pim-malloc-bench/v1"
+# per-record attribution stamps (the only non-numeric record fields besides
+# name/derived): allocator design point and jax version
+STRING_FIELDS = ("backend", "jax")
 
 _MODULES = {
     "fig5": "fig5_design_space",
@@ -41,11 +44,18 @@ _MODULES = {
 
 def env_stamp(smoke: bool) -> dict:
     import jax
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     try:
         commit = subprocess.run(
             ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
-            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-            timeout=10).stdout.strip() or "unknown"
+            cwd=root, timeout=10).stdout.strip() or "unknown"
+        # a baseline generated from an uncommitted tree must say so: the
+        # stamped revision alone could not reproduce its rows
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True, text=True,
+            cwd=root, timeout=10).stdout.strip()
+        if commit != "unknown" and dirty:
+            commit += "-dirty"
     except Exception:
         commit = "unknown"
     return {
@@ -85,6 +95,9 @@ def validate(doc: dict) -> list:
         if not isinstance(recs, list):
             errs.append(f"figs.{fig}.records not a list")
             continue
+        names = [r.get("name") for r in recs]
+        for dup in sorted({n for n in names if names.count(n) > 1}):
+            errs.append(f"figs.{fig} duplicate record name {dup!r}")
         for i, r in enumerate(recs):
             if not isinstance(r.get("name"), str):
                 errs.append(f"figs.{fig}.records[{i}].name missing")
@@ -94,6 +107,10 @@ def validate(doc: dict) -> list:
                 errs.append(f"figs.{fig}.records[{i}].derived not a string")
             for k, v in r.items():
                 if k in ("name", "derived"):
+                    continue
+                if k in STRING_FIELDS:  # attribution stamps
+                    if not isinstance(v, str):
+                        errs.append(f"figs.{fig}.records[{i}].{k} not a string")
                     continue
                 if not isinstance(v, numbers.Number):
                     errs.append(f"figs.{fig}.records[{i}].{k} not numeric")

@@ -12,7 +12,8 @@ Python-level call. For performance-critical / distributed use, call
 Migration from the pre-protocol Allocator: constructor args and
 `pimMalloc` / `pimFree` / `pimMallocBatch` / `pimFreeBatch` / `gc` /
 `stats` are unchanged; the facade now also exposes `pimRealloc` /
-`pimCalloc`, a `kind=` selector ("sw" default, "hwsw", "strawman"), the
+`pimCalloc`, a `kind=` selector ("sw" default, "hwsw", "strawman",
+"pallas" — the fused-kernel fast path), the
 raw `request()` entry point, and `last_info` (per-thread DPU latencies of
 the most recent round). See docs/api.md.
 """
@@ -96,9 +97,12 @@ class Allocator:
         return self.request(heap.calloc_request(nmemb, sizes)).ptr
 
     def gc(self) -> None:
-        """Merge fully-free thread-cache blocks back into the buddy."""
+        """Merge fully-free thread-cache blocks back into the buddy.
+
+        Works on every pim-style kind (sw/hwsw/pallas share the
+        PimMallocState layout); strawman has no thread caches to merge."""
         if self.cfg.kind == "strawman":
-            return  # no thread caches to merge
+            return
         self.state = SystemState(
             alloc=pim_malloc.gc(self.cfg.pm, self.state.alloc),
             cache=self.state.cache,

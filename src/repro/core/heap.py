@@ -1,7 +1,7 @@
 """The transform-native allocator surface: one request/response protocol.
 
-Every allocator design point in this repo (``strawman``, ``sw``, ``hwsw``)
-serves the same typed protocol:
+Every allocator design point in this repo (``strawman``, ``sw``, ``hwsw``,
+``pallas`` — the fused-kernel fast path) serves the same typed protocol:
 
     state, response = heap.step(cfg, state, request)
 
@@ -90,10 +90,16 @@ class AllocResponse(NamedTuple):
 # ---------------------------------------------------------------------------
 # request builders
 # ---------------------------------------------------------------------------
-def _mask(active, T):
+# Builders accept any leading batch shape — the thread axis is last, so a
+# [T], [C, T] or [R, C, T] argument yields a same-shaped request (this is
+# how FleetRouter / fig_fleet call them). An `active` mask broadcasts
+# NumPy-style against the data (trailing axes align); pass it pre-shaped —
+# the MultiCoreHeap/ShardedHeap wrappers instead vmap the builders so
+# leading-axis ([C] / [R, C]) masks select cores/ranks.
+def _mask(active, shape):
     if active is None:
-        return jnp.ones((T,), bool)
-    return jnp.asarray(active, bool)
+        return jnp.ones(shape, bool)
+    return jnp.broadcast_to(jnp.asarray(active, bool), shape)
 
 
 def noop_request(num_threads: int) -> AllocRequest:
@@ -103,7 +109,7 @@ def noop_request(num_threads: int) -> AllocRequest:
 
 def malloc_request(sizes, active=None) -> AllocRequest:
     sizes = jnp.asarray(sizes, jnp.int32)
-    on = _mask(active, sizes.shape[-1]) & (sizes > 0)
+    on = _mask(active, sizes.shape) & (sizes > 0)
     return AllocRequest(op=jnp.where(on, OP_MALLOC, OP_NOOP).astype(jnp.int32),
                         size=jnp.where(on, sizes, 0),
                         ptr=jnp.full_like(sizes, -1))
@@ -111,7 +117,7 @@ def malloc_request(sizes, active=None) -> AllocRequest:
 
 def free_request(ptrs, active=None) -> AllocRequest:
     ptrs = jnp.asarray(ptrs, jnp.int32)
-    on = _mask(active, ptrs.shape[-1]) & (ptrs >= 0)
+    on = _mask(active, ptrs.shape) & (ptrs >= 0)
     return AllocRequest(op=jnp.where(on, OP_FREE, OP_NOOP).astype(jnp.int32),
                         size=jnp.zeros_like(ptrs),
                         ptr=jnp.where(on, ptrs, -1))
@@ -120,7 +126,7 @@ def free_request(ptrs, active=None) -> AllocRequest:
 def realloc_request(ptrs, sizes, active=None) -> AllocRequest:
     ptrs = jnp.asarray(ptrs, jnp.int32)
     sizes = jnp.asarray(sizes, jnp.int32)
-    on = _mask(active, ptrs.shape[-1])
+    on = _mask(active, ptrs.shape)
     return AllocRequest(op=jnp.where(on, OP_REALLOC, OP_NOOP).astype(jnp.int32),
                         size=jnp.where(on, sizes, 0),
                         ptr=jnp.where(on, ptrs, -1))
@@ -133,23 +139,24 @@ def calloc_request(nmemb, sizes, active=None) -> AllocRequest:
     from .pim_malloc import total_calloc_bytes
     sizes = jnp.asarray(sizes, jnp.int32)
     total = total_calloc_bytes(nmemb, sizes)
-    on = _mask(active, sizes.shape[-1]) & (total > 0)
+    on = _mask(active, total.shape) & (total > 0)
     return AllocRequest(op=jnp.where(on, OP_CALLOC, OP_NOOP).astype(jnp.int32),
                         size=jnp.where(on, total, 0),
-                        ptr=jnp.full_like(sizes, -1))
+                        ptr=jnp.full_like(total, -1))
 
 
 # ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
-_BACKENDS: dict[str, Callable] = {}
+REGISTRY: dict[str, Callable] = {}
+_BACKENDS = REGISTRY  # legacy alias
 
 
 def register(kind: str):
     """Register a backend step: fn(cfg, state, AllocRequest) -> (state, AllocResponse)."""
 
     def deco(fn):
-        _BACKENDS[kind] = fn
+        REGISTRY[kind] = fn
         return fn
 
     return deco
@@ -157,12 +164,12 @@ def register(kind: str):
 
 def kinds() -> tuple:
     _ensure_backends()
-    return tuple(sorted(_BACKENDS))
+    return tuple(sorted(REGISTRY))
 
 
 def _ensure_backends():
-    if not _BACKENDS:
-        from . import system  # noqa: F401  (registers strawman/sw/hwsw)
+    if not REGISTRY:
+        from . import system  # noqa: F401  (registers strawman/sw/hwsw/pallas)
 
 
 def init(cfg, prepopulate: bool = True):
@@ -243,6 +250,8 @@ class MultiCoreHeap:
         self.state, resp = self._step(self.state, request)
         return resp
 
+    # vmap (rather than relying on builder broadcasting) so a per-core
+    # [C]-shaped active mask keeps masking whole cores, not thread slots
     def malloc(self, sizes, active=None) -> AllocResponse:
         return self.step(jax.vmap(malloc_request)(
             jnp.asarray(sizes, jnp.int32),
@@ -334,6 +343,8 @@ class ShardedHeap:
         self.state, resp = self._step(self.state, request)
         return resp
 
+    # vmap twice (rather than relying on builder broadcasting) so [R]- or
+    # [R, C]-shaped active masks keep masking ranks/cores, not thread slots
     def _vv(self, build, *args):
         return self.step(jax.vmap(jax.vmap(build))(*args))
 

@@ -1,4 +1,4 @@
-"""End-to-end allocator system simulation: the paper's three design points.
+"""End-to-end allocator system simulation: the paper's design points.
 
   strawman : buddy_alloc_PIM_DRAM — single-level buddy over the whole heap,
              min block 32 B (20-level tree for 32 MB), shared mutex, coarse
@@ -7,6 +7,10 @@
              coarse SW metadata buffer. (Section 4.1.)
   hwsw     : PIM-malloc-HW/SW — same frontend/backend, but backend metadata
              served by the 16-entry LRU hardware buddy cache. (Section 4.2.)
+  pallas   : hwsw semantics served by ONE fused Pallas kernel per core
+             (`repro.kernels.heap_step`): VMEM-resident freelist cache +
+             in-kernel buddy traversal + in-kernel LRU buddy cache.
+             Bitwise-equal to hwsw in interpret mode; the device fast path.
 
 All three kinds serve the `repro.core.heap` request/response protocol: this
 module registers one cost-model-instrumented `heap.step` implementation per
@@ -39,7 +43,7 @@ from .heap import (OP_CALLOC, OP_FREE, OP_MALLOC, OP_NOOP, OP_REALLOC,
                    AllocRequest, AllocResponse)
 from .pim_malloc import INVALID, PimMallocConfig
 
-KINDS = ("strawman", "sw", "hwsw")
+KINDS = ("strawman", "sw", "hwsw", "pallas")
 
 
 # --------------------------------------------------------------------------
@@ -178,18 +182,20 @@ class SystemConfig:
 
     @property
     def access_fn(self):
-        if self.kind == "hwsw":
+        if self.kind in ("hwsw", "pallas"):
             return functools.partial(buddy_cache_access, self.bc)
         return functools.partial(sw_buffer_access, self.sw_buf)
 
     def cache_init(self):
-        if self.kind == "hwsw":
+        if self.kind in ("hwsw", "pallas"):
             return buddy_cache_init(self.bc)
         return sw_buffer_init(self.sw_buf)
 
     @property
     def dma_bytes_per_miss(self) -> int:
-        return buddy_cache.WORD_BYTES if self.kind == "hwsw" else self.sw_buf.line_bytes
+        if self.kind in ("hwsw", "pallas"):
+            return buddy_cache.WORD_BYTES
+        return self.sw_buf.line_bytes
 
 
 class SystemState(NamedTuple):
@@ -275,7 +281,7 @@ def _protocol_round(cfg: SystemConfig, st: SystemState, req: AllocRequest,
                             f_active)
     fpath = free_path_fn(fev)
 
-    # ---- one cache pass + one mutex queue over both phases -----------------
+    # ---- one cache pass + shared pricing over both phases ------------------
     n_back_m = jnp.sum(mev.backend_pos >= 0)
     bpos = jnp.concatenate([
         mev.backend_pos,
@@ -284,58 +290,87 @@ def _protocol_round(cfg: SystemConfig, st: SystemState, req: AllocRequest,
     traces = jnp.concatenate([mev.trace, fev.trace], axis=0)
     cache_st, tstats = _cache_pass(cfg, st.cache, bpos, traces)
     T = op.shape[0]
-    hits_m, hits_f = tstats.hits[:T], tstats.hits[T:]
-    miss_m, miss_f = tstats.misses[:T], tstats.misses[T:]
-    dram_m, dram_f = tstats.dram_bytes[:T], tstats.dram_bytes[T:]
+    resp = _price_round(
+        cfg, req, mptrs=mptrs, m_path=mev.path, m_bpos=mev.backend_pos,
+        m_lvdown=mev.levels_down, m_lvup=mev.levels_up, fpath=fpath,
+        f_bpos=fev.backend_pos, f_lvup=fev.levels_up,
+        hits_m=tstats.hits[:T], miss_m=tstats.misses[:T],
+        dram_m=tstats.dram_bytes[:T], hits_f=tstats.hits[T:],
+        miss_f=tstats.misses[T:], dram_f=tstats.dram_bytes[T:],
+        in_place=in_place, moved=moved, mok=mok, valid_old=meta.valid_old,
+        old_bytes=meta.old_bytes, new_bytes=meta.new_bytes,
+        re_free0=re_free0)
+    return SystemState(alloc=alloc_st, cache=cache_st), resp
 
-    cyc_m = cost_model.backend_op_cyc(cfg.dpu, mev.levels_down, mev.levels_up,
+
+def _price_round(cfg: SystemConfig, req: AllocRequest, *, mptrs, m_path,
+                 m_bpos, m_lvdown, m_lvup, fpath, f_bpos, f_lvup, hits_m,
+                 miss_m, dram_m, hits_f, miss_f, dram_f, in_place, moved,
+                 mok, valid_old, old_bytes, new_bytes, re_free0):
+    """Price one protocol round and assemble the AllocResponse.
+
+    Shared by every backend: the scan-based rounds feed it the metadata
+    cache sim's per-op stats, the ``pallas`` backend feeds it the fused
+    kernel's in-kernel counters. Identical counters => identical latencies,
+    which is what pins the kernel path bitwise to the ``hwsw`` reference.
+    """
+    op, size, ptr = req.op, req.size, req.ptr
+    is_alloc = (op == OP_MALLOC) | (op == OP_CALLOC)
+    is_free = op == OP_FREE
+
+    n_back_m = jnp.sum(m_bpos >= 0)
+    bpos = jnp.concatenate(
+        [m_bpos, jnp.where(f_bpos >= 0, f_bpos + n_back_m, INVALID)])
+    cyc_m = cost_model.backend_op_cyc(cfg.dpu, m_lvdown, m_lvup,
                                       hits_m, miss_m, dram_m)
-    cyc_m = jnp.where(mev.backend_pos >= 0, cyc_m, 0.0)
-    cyc_f = cost_model.backend_op_cyc(cfg.dpu, jnp.zeros_like(fev.levels_up),
-                                      fev.levels_up, hits_f, miss_f, dram_f)
-    cyc_f = jnp.where(fev.backend_pos >= 0, cyc_f, 0.0)
+    cyc_m = jnp.where(m_bpos >= 0, cyc_m, 0.0)
+    cyc_f = cost_model.backend_op_cyc(cfg.dpu, jnp.zeros_like(f_lvup),
+                                      f_lvup, hits_f, miss_f, dram_f)
+    cyc_f = jnp.where(f_bpos >= 0, cyc_f, 0.0)
 
+    # mutex busy-wait: position k waits for the service of positions < k
     svc = jnp.concatenate([cyc_m, cyc_f])
     key = jnp.where(bpos >= 0, bpos, jnp.int32(1 << 30))
     order = jnp.argsort(key)
     wait_sorted = jnp.cumsum(svc[order]) - svc[order]
     wait = jnp.zeros_like(svc).at[order].set(wait_sorted)
     wait = jnp.where(bpos >= 0, wait, 0.0)
+    T = op.shape[0]
     wait_m, wait_f = wait[:T], wait[T:]
 
     dpu = cfg.dpu
-    own_m = (jnp.where(mev.path == 0, dpu.cyc_front_hit, 0.0)
-             + jnp.where(mev.path == 1, dpu.cyc_front_hit + dpu.cyc_refill, 0.0)
+    own_m = (jnp.where(m_path == 0, dpu.cyc_front_hit, 0.0)
+             + jnp.where(m_path == 1, dpu.cyc_front_hit + dpu.cyc_refill, 0.0)
              + cyc_m)
-    lat_m = jnp.where(mev.path >= 0, own_m + wait_m, 0.0)
+    lat_m = jnp.where(m_path >= 0, own_m + wait_m, 0.0)
     own_f = jnp.where(fpath == 0, dpu.cyc_front_push, 0.0) + cyc_f
     lat_f = jnp.where(fpath >= 0, own_f + wait_f, 0.0)
     # relocating realloc DMAs the surviving payload; calloc zero-fills.
     copy_cyc = jnp.where(
-        moved & mok & meta.valid_old,
-        cost_model.mram_access_cyc(dpu, jnp.minimum(meta.old_bytes,
-                                                    meta.new_bytes)), 0.0)
+        moved & mok & valid_old,
+        cost_model.mram_access_cyc(dpu, jnp.minimum(old_bytes, new_bytes)),
+        0.0)
     zero_cyc = jnp.where((op == OP_CALLOC) & mok,
                          cost_model.mram_access_cyc(dpu, size), 0.0)
     # in-place realloc: O(1) metadata peek, no heap traffic.
     inplace_cyc = jnp.where(in_place, jnp.float32(dpu.cyc_front_hit), 0.0)
     latency = lat_m + lat_f + copy_cyc + zero_cyc + inplace_cyc
 
+    m_active = (is_alloc & (size > 0)) | moved
     out_ptr = jnp.where(is_alloc & mok, mptrs,
                         jnp.where(in_place, ptr,
                                   jnp.where(moved & mok, mptrs, INVALID)))
     ok = (is_alloc & mok) | in_place | (moved & mok) | (
         (is_free | re_free0) & ((fpath == 0) | (fpath == 1)))
-    path = jnp.where(m_active, mev.path,
+    path = jnp.where(m_active, m_path,
                      jnp.where(is_free | re_free0, fpath,
                                jnp.where(in_place, 0, INVALID)))
-    resp = AllocResponse(
+    return AllocResponse(
         ptr=out_ptr, ok=ok, path=path.astype(jnp.int32), moved=moved & mok,
         latency_cyc=latency, backend_cyc=cyc_m + cyc_f,
         meta_hits=hits_m + hits_f, meta_misses=miss_m + miss_f,
         dram_bytes=dram_m + dram_f,
     )
-    return SystemState(alloc=alloc_st, cache=cache_st), resp
 
 
 @heap.register("strawman")
@@ -359,6 +394,84 @@ def _step_pim(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         meta_fn=lambda s, p, z: pim_malloc.realloc_meta(cfg.pm, s, p, z),
         free_path_fn=lambda ev: ev.path,
     )
+
+
+@heap.register("pallas")
+def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
+    """The fused-kernel design point: hwsw semantics, one Pallas call.
+
+    The whole round (dispatch + thread-cache frontend + serial buddy backend
+    + LRU buddy cache) runs inside `repro.kernels.heap_step`; this wrapper
+    only rebuilds the state pytree, folds the kernel's per-thread records
+    into the allocator stats, and prices the round through the same
+    `_price_round` as the scan-based backends. State layout is identical to
+    ``hwsw`` (PimMallocState + BuddyCacheState), and results are bitwise
+    equal to it — pinned in tests/test_pallas_heap.py.
+    """
+    from repro.kernels import heap_step
+
+    pmc = cfg.pm
+    al, ca = st.alloc, st.cache
+    out = heap_step.fused_heap_step(
+        req.op, req.size, req.ptr, al.buddy.longest, al.counts, al.stacks,
+        al.block_cls, al.block_free, al.big_log2, ca.tags, ca.last_used,
+        jnp.reshape(ca.clock, (1,)), heap_bytes=pmc.heap_bytes,
+        block_bytes=pmc.block_bytes, size_classes=pmc.size_classes)
+
+    m_hit = out.m_hit.astype(bool)
+    m_refill = out.m_refill.astype(bool)
+    m_bypass = out.m_bypass.astype(bool)
+    m_okb = out.m_okb.astype(bool)
+    f_push = out.f_push.astype(bool)
+    f_big = out.f_big.astype(bool)
+    f_over = out.f_over.astype(bool)
+    in_place = out.in_place.astype(bool)
+    moved = out.moved_raw.astype(bool)
+    valid_old = out.valid_old.astype(bool)
+
+    need = m_refill | m_bypass
+    is_alloc = (req.op == OP_MALLOC) | (req.op == OP_CALLOC)
+    m_active = (is_alloc & (req.size > 0)) | moved
+    too_big = m_active & (req.size > pmc.heap_bytes)
+    m_path = jnp.where(
+        m_hit, 0,
+        jnp.where(m_refill & m_okb, 1,
+                  jnp.where(m_bypass & m_okb, 2,
+                            jnp.where(need | too_big, 3, INVALID)))
+    ).astype(jnp.int32)
+    fpath = jnp.where(f_push, 0,
+                      jnp.where(f_big, 1,
+                                jnp.where(f_over, 2, INVALID))).astype(jnp.int32)
+    mok = m_active & (out.m_ptr >= 0)
+    re_free0 = (req.op == OP_REALLOC) & (req.size <= 0) & (req.ptr >= 0)
+
+    stats = al.stats._replace(
+        front_hits=al.stats.front_hits + jnp.sum(m_hit),
+        front_misses=al.stats.front_misses + jnp.sum(m_refill),
+        bypass=al.stats.bypass + jnp.sum(m_bypass),
+        fails=al.stats.fails + jnp.sum((need & ~m_okb) | too_big),
+        frees_small=al.stats.frees_small + jnp.sum(f_push),
+        frees_big=al.stats.frees_big + jnp.sum(f_big),
+        dropped_frees=al.stats.dropped_frees + jnp.sum(f_over),
+    )
+    new_alloc = pim_malloc.PimMallocState(
+        buddy=BuddyState(longest=out.longest), counts=out.counts,
+        stacks=out.stacks, block_cls=out.block_cls,
+        block_free=out.block_free, big_log2=out.big_log2, stats=stats)
+    new_cache = buddy_cache.BuddyCacheState(
+        tags=out.tags, last_used=out.last_used,
+        clock=jnp.reshape(out.clock, ()))
+
+    dma = cfg.dma_bytes_per_miss
+    resp = _price_round(
+        cfg, req, mptrs=out.m_ptr, m_path=m_path, m_bpos=out.m_bpos,
+        m_lvdown=out.m_lvdown, m_lvup=out.m_lvup, fpath=fpath,
+        f_bpos=out.f_bpos, f_lvup=out.f_lvup,
+        hits_m=out.m_hits, miss_m=out.m_miss, dram_m=out.m_miss * dma,
+        hits_f=out.f_hits, miss_f=out.f_miss, dram_f=out.f_miss * dma,
+        in_place=in_place, moved=moved, mok=mok, valid_old=valid_old,
+        old_bytes=out.old_bytes, new_bytes=out.new_bytes, re_free0=re_free0)
+    return SystemState(alloc=new_alloc, cache=new_cache), resp
 
 
 def _round_info(resp: AllocResponse) -> RoundInfo:

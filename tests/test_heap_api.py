@@ -363,3 +363,27 @@ def test_table2_facade_roundtrip():
 
 def test_registry_covers_all_kinds():
     assert set(heap.kinds()) == set(sysm.KINDS)
+
+
+def test_multicore_per_core_active_mask():
+    """A [C]-shaped active mask masks whole cores (not thread slots)."""
+    C = 3
+    cfg = sysm.SystemConfig(kind="sw", heap_bytes=1 << 18, num_threads=T)
+    mch = heap.MultiCoreHeap(cfg, num_cores=C)
+    sizes = jnp.full((C, T), 64, jnp.int32)
+    resp = mch.malloc(sizes, active=jnp.array([True, False, False]))
+    assert bool((resp.ptr[0] >= 0).all())
+    assert bool((resp.ptr[1:] == -1).all())
+
+
+def test_request_builders_accept_batched_and_scalar_shapes():
+    """Builders produce consistent pytree leaves on [R, C, T] batches and
+    on broadcast scalar arguments (all leaves share one shape)."""
+    sizes = jnp.full((2, 3, T), 64, jnp.int32)
+    for req in (heap.malloc_request(sizes),
+                heap.free_request(sizes),
+                heap.realloc_request(sizes, sizes),
+                heap.calloc_request(sizes, jnp.int32(16))):
+        assert req.op.shape == req.size.shape == req.ptr.shape == (2, 3, T)
+    req = heap.calloc_request(jnp.array([4] * T, jnp.int32), jnp.int32(16))
+    assert req.op.shape == req.size.shape == req.ptr.shape == (T,)

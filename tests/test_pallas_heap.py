@@ -1,0 +1,491 @@
+"""Conformance + property tests for the fused ``pallas`` heap backend.
+
+Three independent oracles pin the kernel:
+
+1. the ``hwsw`` reference round (`system._protocol_round`) — bitwise
+   equality of every response field (incl. modeled latency and buddy-cache
+   hit/miss counters) and of the full state pytree, on the same legacy
+   pointer-sequence tapes as tests/test_heap_api.py;
+2. a plain-Python/NumPy heap model (`NpHeapModel`, below) — an
+   implementation with ordinary control flow, no JAX — via seeded random
+   op streams and hypothesis property tests (push/pop/refill
+   interleavings, realloc class changes, exactly-full freelists);
+3. the transform stack — MultiCoreHeap/ShardedHeap over the pallas step
+   (vmap/shard_map of a `pallas_call`) must match the per-core step.
+
+Everything runs in interpret mode on CPU (the CI `kernels` matrix entry
+sets JAX_PLATFORMS=cpu explicitly).
+"""
+import functools
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heap
+from repro.core import pim_malloc as pm
+from repro.core import system as sysm
+
+from conftest import hypothesis_or_skip
+
+given, settings, st_ = hypothesis_or_skip()
+
+T = 4
+HEAP = 1 << 18
+
+
+def _cfg(kind, heap_bytes=HEAP, **pm_kw):
+    pmc = pm.PimMallocConfig(heap_bytes=heap_bytes, num_threads=T, **pm_kw)
+    return sysm.SystemConfig(kind=kind, heap_bytes=heap_bytes,
+                             num_threads=T, pm=pmc)
+
+
+def _stepper(cfg):
+    state = {"st": heap.init(cfg)}
+    step = jax.jit(functools.partial(heap.step, cfg))
+
+    def run(req):
+        state["st"], resp = step(state["st"], req)
+        return resp
+
+    return state, run
+
+
+# ---------------------------------------------------------------- vs hwsw
+def _assert_resp_equal(rp, rh, msg=""):
+    for f in rp._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(rp, f)),
+                                      np.asarray(getattr(rh, f)),
+                                      err_msg=f"{msg} field={f}")
+
+
+def _assert_state_equal(sp, sh, msg=""):
+    for lp, lh in zip(jax.tree.leaves(sp), jax.tree.leaves(sh)):
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(lh),
+                                      err_msg=msg)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pallas_matches_hwsw_on_legacy_tapes(seed):
+    """Acceptance: the fused kernel is bitwise-conformant with hwsw on the
+    legacy pointer-sequence suite — pointers, paths, latencies, cache
+    hit/miss counters, and the complete state pytree after every round."""
+    rng = random.Random(seed)
+    cfg_p, cfg_h = _cfg("pallas"), _cfg("hwsw")
+    sp, run_p = _stepper(cfg_p)
+    sh, run_h = _stepper(cfg_h)
+    live = [[] for _ in range(T)]
+    for r in range(14):
+        roll = rng.random()
+        if roll < 0.5:
+            sizes = jnp.array([rng.choice([16, 100, 256, 2048, 3000, 8192])
+                               for _ in range(T)], jnp.int32)
+            req = heap.malloc_request(sizes)
+        elif roll < 0.75:
+            ptrs = [live[t].pop(rng.randrange(len(live[t])))
+                    if live[t] and rng.random() < 0.8 else -1
+                    for t in range(T)]
+            req = heap.free_request(jnp.array(ptrs, jnp.int32))
+        else:
+            ptrs = [live[t].pop(rng.randrange(len(live[t])))
+                    if live[t] and rng.random() < 0.8 else -1
+                    for t in range(T)]
+            sizes = [rng.choice([0, 16, 100, 300, 3000, 8192])
+                     for _ in range(T)]
+            req = heap.realloc_request(jnp.array(ptrs, jnp.int32),
+                                       jnp.array(sizes, jnp.int32))
+        rp, rh = run_p(req), run_h(req)
+        _assert_resp_equal(rp, rh, f"seed={seed} round={r}")
+        _assert_state_equal(sp["st"], sh["st"], f"seed={seed} round={r}")
+        for t in range(T):
+            if int(rp.ptr[t]) >= 0:
+                live[t].append(int(rp.ptr[t]))
+
+
+def test_pallas_matches_hwsw_mixed_op_round():
+    """One round mixing all five op codes, thread-per-op."""
+    cfg_p, cfg_h = _cfg("pallas"), _cfg("hwsw")
+    sp, run_p = _stepper(cfg_p)
+    sh, run_h = _stepper(cfg_h)
+    r0p = run_p(heap.malloc_request(jnp.array([64, 256, 64, 8192], jnp.int32)))
+    r0h = run_h(heap.malloc_request(jnp.array([64, 256, 64, 8192], jnp.int32)))
+    _assert_resp_equal(r0p, r0h)
+    req = heap.AllocRequest(
+        op=jnp.array([heap.OP_REALLOC, heap.OP_FREE, heap.OP_CALLOC,
+                      heap.OP_NOOP], jnp.int32),
+        size=jnp.array([8192, 0, 48, 0], jnp.int32),
+        ptr=jnp.array([int(r0p.ptr[0]), int(r0p.ptr[1]), -1, -1], jnp.int32))
+    _assert_resp_equal(run_p(req), run_h(req))
+    _assert_state_equal(sp["st"], sh["st"])
+
+
+def test_pallas_cache_size_sweep_matches_hwsw():
+    """fig15-style sweeps work on the kernel path: the in-kernel LRU honors
+    BuddyCacheConfig.n_entries and reproduces hwsw's hit/miss counters."""
+    from repro.core.buddy_cache import BuddyCacheConfig
+
+    for entries in (4, 16, 64):
+        cfg_p = sysm.SystemConfig(kind="pallas", heap_bytes=HEAP,
+                                  num_threads=T,
+                                  bc=BuddyCacheConfig(n_entries=entries))
+        cfg_h = sysm.SystemConfig(kind="hwsw", heap_bytes=HEAP,
+                                  num_threads=T,
+                                  bc=BuddyCacheConfig(n_entries=entries))
+        _, run_p = _stepper(cfg_p)
+        _, run_h = _stepper(cfg_h)
+        tot_p = tot_h = 0
+        for _ in range(4):
+            sizes = jnp.array([4096, 8192, 4096, 16384], jnp.int32)
+            rp, rh = run_p(heap.malloc_request(sizes)), \
+                run_h(heap.malloc_request(sizes))
+            _assert_resp_equal(rp, rh, f"entries={entries}")
+            tot_p += int(jnp.sum(rp.meta_hits))
+            tot_h += int(jnp.sum(rh.meta_hits))
+        assert tot_p == tot_h
+        if entries >= 16:
+            assert tot_p > 0  # a warm cache must actually hit
+
+
+def test_pallas_multicore_and_sharded_match_single_core():
+    """vmap/shard_map over the fused kernel == per-core steps, bitwise."""
+    C = 3
+    cfg = _cfg("pallas", heap_bytes=1 << 18)
+    mch = heap.MultiCoreHeap(cfg, num_cores=C)
+    singles = [_stepper(cfg) for _ in range(C)]
+    rng = np.random.RandomState(0)
+    for _ in range(3):
+        sizes = rng.choice([16, 100, 2048, 8192], size=(C, T)).astype(np.int32)
+        resp = mch.malloc(jnp.asarray(sizes))
+        for c, (stc, runc) in enumerate(singles):
+            rc = runc(heap.malloc_request(jnp.asarray(sizes[c])))
+            np.testing.assert_array_equal(np.asarray(resp.ptr[c]),
+                                          np.asarray(rc.ptr))
+            np.testing.assert_allclose(np.asarray(resp.latency_cyc[c]),
+                                       np.asarray(rc.latency_cyc))
+    sh = heap.ShardedHeap(cfg, num_ranks=1, num_cores=C, mesh=False)
+    sizes = jnp.asarray(rng.choice([16, 256], size=(1, C, T)).astype(np.int32))
+    r = sh.malloc(sizes)
+    assert r.ptr.shape == (1, C, T)
+    assert bool((r.ptr >= 0).all())
+
+
+# ------------------------------------------------- NumPy reference model
+def _np_next_pow2(x):
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+class NpBuddy:
+    """Array-buddy (`longest[]`) with plain Python control flow."""
+
+    def __init__(self, heap_bytes, min_block):
+        self.heap, self.minb = heap_bytes, min_block
+        n = 2 * (heap_bytes // min_block)
+        self.longest = np.zeros(n, np.int64)
+        for i in range(1, n):
+            self.longest[i] = heap_bytes >> (i.bit_length() - 1)
+
+    def alloc(self, size):
+        size = max(_np_next_pow2(size), self.minb)
+        if size > self.heap or self.longest[1] < size:
+            return -1
+        node, node_size = 1, self.heap
+        while node_size > size:
+            node = 2 * node if self.longest[2 * node] >= size else 2 * node + 1
+            node_size >>= 1
+        off = node * node_size - self.heap
+        self.longest[node] = 0
+        while node > 1:
+            node >>= 1
+            self.longest[node] = max(self.longest[2 * node],
+                                     self.longest[2 * node + 1])
+        return off
+
+    def free(self, off, size):
+        size = max(_np_next_pow2(size), self.minb)
+        node = (off + self.heap) // size
+        if not (0 <= off < self.heap and self.longest[node] == 0):
+            return
+        self.longest[node] = size
+        nsize = size
+        while node > 1:
+            node >>= 1
+            psize = nsize << 1
+            l, r = self.longest[2 * node], self.longest[2 * node + 1]
+            self.longest[node] = psize if (l == nsize and r == nsize) \
+                else max(l, r)
+            nsize = psize
+
+
+class NpHeapModel:
+    """Pointer-semantics model of one protocol round (no cost model)."""
+
+    def __init__(self, cfg: pm.PimMallocConfig, prepopulate=True):
+        self.cfg = cfg
+        self.buddy = NpBuddy(cfg.heap_bytes, cfg.block_bytes)
+        self.stacks = [[[] for _ in cfg.size_classes]
+                       for _ in range(cfg.num_threads)]
+        self.block_cls = {}
+        self.big = {}
+        if prepopulate:
+            for t in range(cfg.num_threads):
+                for c, csize in enumerate(cfg.size_classes):
+                    off = self.buddy.alloc(cfg.block_bytes)
+                    if off < 0:
+                        continue
+                    sub = cfg.block_bytes // csize
+                    self.stacks[t][c] = [off + i * csize for i in range(sub)]
+                    self.block_cls[off // cfg.block_bytes] = c
+
+    def _class_of(self, z):
+        cfg = self.cfg
+        rounded = _np_next_pow2(max(z, min(cfg.size_classes)))
+        lg = rounded.bit_length() - 1
+        return min(max(lg - cfg.log2_min_class, 0), cfg.nc - 1)
+
+    def _meta(self, ptr, size):
+        cfg = self.cfg
+        valid = 0 <= ptr < cfg.heap_bytes
+        b = ptr // cfg.block_bytes if valid else 0
+        small_old = valid and b in self.block_cls
+        big_old = (valid and not small_old and b in self.big
+                   and ptr % cfg.block_bytes == 0)
+        old_bytes = (cfg.size_classes[self.block_cls[b]] if small_old
+                     else (1 << self.big[b]) if big_old else 0)
+        new_small = size <= cfg.max_class
+        new_bytes = (cfg.size_classes[self._class_of(size)] if new_small
+                     else _np_next_pow2(max(size, cfg.block_bytes)))
+        in_place = ((small_old and new_small) or (big_old and not new_small)) \
+            and new_bytes == old_bytes
+        return small_old or big_old, in_place
+
+    def _malloc_phase(self, sizes, active):
+        cfg = self.cfg
+        ptrs = [-1] * cfg.num_threads
+        backend = []
+        for t in range(cfg.num_threads):
+            size = sizes[t]
+            if not active[t] or size <= 0:
+                continue
+            if size > cfg.heap_bytes:
+                continue  # too big: fails without touching the backend
+            if size <= cfg.max_class:
+                c = self._class_of(size)
+                if self.stacks[t][c]:
+                    ptrs[t] = self.stacks[t][c].pop()  # case 1: LIFO hit
+                else:
+                    backend.append((t, c, "refill"))
+            else:
+                backend.append((t, size, "bypass"))
+        for t, arg, kind in backend:  # serial backend, thread order
+            if kind == "refill":
+                c = arg
+                off = self.buddy.alloc(cfg.block_bytes)
+                if off < 0:
+                    continue
+                csize = cfg.size_classes[c]
+                sub = cfg.block_bytes // csize
+                self.stacks[t][c] = [off + i * csize for i in range(sub)]
+                ptrs[t] = self.stacks[t][c].pop()
+                self.block_cls[off // cfg.block_bytes] = c
+            else:
+                alloc_size = _np_next_pow2(max(arg, cfg.block_bytes))
+                off = self.buddy.alloc(alloc_size)
+                if off < 0:
+                    continue
+                self.big[off // cfg.block_bytes] = \
+                    alloc_size.bit_length() - 1
+                ptrs[t] = off
+        return ptrs
+
+    def _free_phase(self, ptrs, active):
+        cfg = self.cfg
+        bigs = []
+        for t in range(cfg.num_threads):
+            ptr = ptrs[t]
+            if not active[t] or not 0 <= ptr < cfg.heap_bytes:
+                continue
+            b = ptr // cfg.block_bytes
+            if b in self.block_cls:
+                c = self.block_cls[b]
+                if len(self.stacks[t][c]) < cfg.cap:
+                    self.stacks[t][c].append(ptr)  # else: dropped free
+            elif b in self.big and ptr % cfg.block_bytes == 0:
+                bigs.append((t, ptr, b))
+        for _, ptr, b in bigs:  # serial backend, thread order
+            self.buddy.free(ptr, 1 << self.big[b])
+            del self.big[b]
+
+    def round(self, op, size, ptr):
+        cfg = self.cfg
+        Tn = cfg.num_threads
+        metas = [self._meta(ptr[t], size[t]) for t in range(Tn)]
+        re_live = [op[t] == heap.OP_REALLOC and size[t] > 0 for t in range(Tn)]
+        in_place = [re_live[t] and metas[t][1] for t in range(Tn)]
+        moved = [re_live[t] and not metas[t][1] for t in range(Tn)]
+        re_free0 = [op[t] == heap.OP_REALLOC and size[t] <= 0 and ptr[t] >= 0
+                    for t in range(Tn)]
+        is_alloc = [op[t] in (heap.OP_MALLOC, heap.OP_CALLOC)
+                    for t in range(Tn)]
+        m_active = [(is_alloc[t] and size[t] > 0) or moved[t]
+                    for t in range(Tn)]
+        mptrs = self._malloc_phase(
+            [size[t] if m_active[t] else 0 for t in range(Tn)], m_active)
+        mok = [m_active[t] and mptrs[t] >= 0 for t in range(Tn)]
+        f_active = [op[t] == heap.OP_FREE
+                    or (moved[t] and metas[t][0] and mok[t]) or re_free0[t]
+                    for t in range(Tn)]
+        self._free_phase([ptr[t] if f_active[t] else -1 for t in range(Tn)],
+                         f_active)
+        return [mptrs[t] if (is_alloc[t] and mok[t]) or (moved[t] and mok[t])
+                else ptr[t] if in_place[t] else -1 for t in range(Tn)]
+
+    def assert_freelists_match(self, state):
+        """Counts + live stack prefixes must equal the kernel state."""
+        counts = np.asarray(state.alloc.counts)
+        stacks = np.asarray(state.alloc.stacks)
+        for t in range(self.cfg.num_threads):
+            for c in range(self.cfg.nc):
+                model = self.stacks[t][c]
+                assert counts[t, c] == len(model), (t, c)
+                np.testing.assert_array_equal(stacks[t, c, :len(model)],
+                                              np.array(model, np.int32),
+                                              err_msg=f"t={t} c={c}")
+
+
+def _drive_model_vs_kernel(cfg, rounds, seed, sizes_pool):
+    """Shared driver: random op rounds, kernel vs NumPy model, live-ptr
+    tracked per thread; asserts pointer equality + freelist state."""
+    rng = random.Random(seed)
+    model = NpHeapModel(cfg.pm)
+    sp, run = _stepper(cfg)
+    live = [[] for _ in range(T)]
+    for _ in range(rounds):
+        roll = rng.random()
+        ops, sizes, ptrs = [], [], []
+        for t in range(T):
+            if roll < 0.45:
+                ops.append(heap.OP_MALLOC)
+                sizes.append(rng.choice(sizes_pool))
+                ptrs.append(-1)
+            elif roll < 0.75:
+                p = live[t].pop(rng.randrange(len(live[t]))) \
+                    if live[t] and rng.random() < 0.85 else -1
+                ops.append(heap.OP_FREE)
+                sizes.append(0)
+                ptrs.append(p)
+            else:
+                p = live[t].pop(rng.randrange(len(live[t]))) \
+                    if live[t] and rng.random() < 0.85 else -1
+                ops.append(heap.OP_REALLOC)
+                sizes.append(rng.choice([0] + list(sizes_pool)))
+                ptrs.append(p)
+        req = heap.AllocRequest(op=jnp.array(ops, jnp.int32),
+                                size=jnp.array(sizes, jnp.int32),
+                                ptr=jnp.array(ptrs, jnp.int32))
+        resp = run(req)
+        want = model.round(ops, sizes, ptrs)
+        assert [int(p) for p in resp.ptr] == want
+        model.assert_freelists_match(sp["st"])
+        for t in range(T):
+            if int(resp.ptr[t]) >= 0:
+                live[t].append(int(resp.ptr[t]))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_kernel_matches_numpy_model(seed):
+    _drive_model_vs_kernel(_cfg("pallas"), rounds=12, seed=seed,
+                           sizes_pool=(16, 100, 256, 2048, 3000, 8192))
+
+
+def test_kernel_matches_numpy_model_tiny_cap():
+    """Exactly-full freelists: a small-cap config makes push-at-capacity (dropped
+    frees) and refill-after-drain reachable within a few rounds."""
+    cfg = _cfg("pallas", size_classes=(512, 1024, 2048), cap=8)
+    _drive_model_vs_kernel(cfg, rounds=14, seed=7,
+                           sizes_pool=(512, 700, 1024, 2048, 8192))
+
+
+def test_exactly_full_stack_drops_free():
+    """Deterministic capacity edge: the 9th push to a cap-8 freelist must be
+    dropped (path 2) and leave the stack untouched — on kernel and model."""
+    cfg = _cfg("pallas", size_classes=(512, 1024, 2048), cap=8)
+    sp, run = _stepper(cfg)
+    model = NpHeapModel(cfg.pm)
+    # drain thread 0's 512 B list (8 sub-blocks) then give them all back
+    got = []
+    for _ in range(8):
+        resp = run(heap.malloc_request(
+            jnp.array([512, 0, 0, 0], jnp.int32)))
+        model.round([heap.OP_MALLOC, 0, 0, 0], [512, 0, 0, 0], [-1] * 4)
+        assert int(resp.path[0]) in (0, 1)
+        got.append(int(resp.ptr[0]))
+    for p in got:
+        run(heap.free_request(jnp.array([p, -1, -1, -1], jnp.int32)))
+        model.round([heap.OP_FREE, 0, 0, 0], [0] * 4, [p, -1, -1, -1])
+    model.assert_freelists_match(sp["st"])
+    assert int(sp["st"].alloc.counts[0, 0]) == cfg.pm.cap  # exactly full
+    # one more free of a foreign 512 B sub-block: overflow -> dropped
+    resp = run(heap.malloc_request(jnp.array([0, 512, 0, 0], jnp.int32)))
+    model.round([0, heap.OP_MALLOC, 0, 0], [0, 512, 0, 0], [-1] * 4)
+    foreign = int(resp.ptr[1])
+    resp = run(heap.free_request(jnp.array([foreign, -1, -1, -1], jnp.int32)))
+    model.round([heap.OP_FREE, 0, 0, 0], [0] * 4, [foreign, -1, -1, -1])
+    assert int(resp.path[0]) == 2 and not bool(resp.ok[0])
+    assert int(sp["st"].alloc.counts[0, 0]) == cfg.pm.cap
+    model.assert_freelists_match(sp["st"])
+
+
+def test_realloc_class_changes_on_kernel():
+    """Realloc across size classes: in-place, grow-move, bypass promotion."""
+    cfg = _cfg("pallas")
+    sp, run = _stepper(cfg)
+    r0 = run(heap.malloc_request(jnp.full((T,), 100, jnp.int32)))
+    r1 = run(heap.realloc_request(
+        r0.ptr, jnp.array([128, 65, 300, 8192], jnp.int32)))
+    assert int(r1.ptr[0]) == int(r0.ptr[0]) and not bool(r1.moved[0])
+    assert int(r1.ptr[1]) == int(r0.ptr[1]) and not bool(r1.moved[1])
+    assert bool(r1.moved[2]) and int(r1.ptr[2]) != int(r0.ptr[2])
+    assert bool(r1.moved[3]) and int(r1.ptr[3]) % cfg.pm.block_bytes == 0
+    # the vacated 128 B sub-blocks return LIFO to threads 2/3's freelists
+    r2 = run(heap.malloc_request(jnp.full((T,), 128, jnp.int32)))
+    assert int(r2.ptr[2]) == int(r0.ptr[2])
+    assert int(r2.ptr[3]) == int(r0.ptr[3])
+
+
+def test_table2_facade_on_pallas_kind():
+    """The paper-facing facade selects the fused kernel via kind="pallas"."""
+    from repro.core.api import initAllocator
+
+    a = initAllocator(1 << 18, num_threads=T, kind="pallas")
+    p1 = a.pimMalloc(100)
+    p2 = a.pimCalloc(16, 16)
+    assert p1 >= 0 and p2 >= 0 and p1 != p2
+    assert a.pimRealloc(p1, 90) == p1          # same class: in place
+    p3 = a.pimRealloc(p1, 2048)                # bigger class: moves
+    assert p3 >= 0 and p3 != p1
+    a.pimFree(p2), a.pimFree(p3)
+    st = a.stats
+    assert st["front_hits"] >= 2 and st["frees_small"] >= 2
+    a.gc()                                     # shared PimMallocState layout
+
+
+# --------------------------------------------------- hypothesis properties
+@given(st_.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_prop_random_streams_match_numpy_model(seed):
+    """Property: on arbitrary mixed op streams the fused kernel and the
+    NumPy model agree on every pointer and on the freelist state."""
+    _drive_model_vs_kernel(_cfg("pallas"), rounds=8, seed=seed,
+                           sizes_pool=(16, 100, 256, 2048, 3000, 8192))
+
+
+@given(st_.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_prop_tiny_cap_streams_match_numpy_model(seed):
+    """Property: same agreement at the cache-capacity edge (cap=8 stacks
+    hit exactly-full on real streams)."""
+    cfg = _cfg("pallas", size_classes=(512, 1024, 2048), cap=8)
+    _drive_model_vs_kernel(cfg, rounds=10, seed=seed,
+                           sizes_pool=(512, 700, 1024, 2048, 8192))

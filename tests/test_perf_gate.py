@@ -1,0 +1,127 @@
+"""The CI perf-regression gate must catch injected regressions and tolerate
+noise-level drift, missing rows, and new rows (see benchmarks/perf_gate.py)."""
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+from benchmarks import perf_gate  # noqa: E402
+
+
+def _doc(rows):
+    return {
+        "schema": "pim-malloc-bench/v1",
+        "env": {"python": "3", "jax": "0", "backend": "cpu",
+                "device_count": 1, "commit": "x", "smoke": True},
+        "figs": {"fig14": {"status": "ok", "wall_s": 1.0, "records": [
+            {"name": n, "us_per_call": v, "derived": ""}
+            for n, v in rows.items()]}},
+    }
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+BASE = {"fig14/sw/size=32": 0.10, "fig14/hwsw/size=32": 0.08,
+        "fig14/pallas/size=32": 0.08, "fig14/claim": 0.0}
+
+
+def test_gate_passes_on_identical_doc(tmp_path):
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(BASE))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+
+
+def test_gate_fails_on_injected_regression(tmp_path):
+    """Acceptance: an injected >20% us_per_call regression exits non-zero."""
+    cur = dict(BASE)
+    cur["fig14/hwsw/size=32"] = BASE["fig14/hwsw/size=32"] * 1.5  # +50%
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 1
+
+
+def test_gate_warns_but_passes_between_thresholds(tmp_path, capsys):
+    cur = dict(BASE)
+    cur["fig14/sw/size=32"] = BASE["fig14/sw/size=32"] * 1.10  # +10%
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    out = capsys.readouterr().out
+    assert "Warnings" in out and "+10.0%" in out
+
+
+def test_gate_tolerates_missing_and_new_rows(tmp_path, capsys):
+    cur = dict(BASE)
+    del cur["fig14/pallas/size=32"]                 # tracked row vanished
+    cur["fig14/newrow"] = 0.5                       # new row appeared
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0  # warns, doesn't fail
+    out = capsys.readouterr().out
+    assert "disappeared" in out and "newrow" in out
+
+
+def test_gate_fails_when_current_figure_errored(tmp_path, capsys):
+    """A figure that crashed in the current run must FAIL the gate — its
+    tracked rows would otherwise degrade into 'missing' warnings."""
+    cur_doc = _doc({})  # fig14 rows gone...
+    cur_doc["figs"]["fig14"] = {"status": "error", "wall_s": 0.1,
+                                "records": [], "error": "AssertionError: x"}
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", cur_doc)
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 1
+    out = capsys.readouterr().out
+    assert "errored in the current run" in out
+
+
+def test_gate_ignores_zero_and_error_rows(tmp_path):
+    """us_per_call == 0 rows (claims/summaries) and error figs are untracked."""
+    base_doc = _doc(BASE)
+    base_doc["figs"]["broken"] = {"status": "error", "wall_s": 0.0,
+                                  "records": [{"name": "broken/r",
+                                               "us_per_call": 1.0}]}
+    cur = dict(BASE)
+    cur["fig14/claim"] = 99.0  # zero-baseline row may change freely
+    b = _write(tmp_path, "base.json", base_doc)
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+
+
+def test_gate_writes_github_step_summary(tmp_path):
+    cur = dict(BASE)
+    cur["fig14/hwsw/size=32"] = 1.0
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    summary = tmp_path / "summary.md"
+    assert perf_gate.run_gate(c, b, 0.20, 0.05,
+                              summary_path=str(summary)) == 1
+    text = summary.read_text()
+    assert "Perf gate FAILED" in text and "| row |" in text
+
+
+def test_gate_rejects_wrong_schema(tmp_path):
+    doc = _doc(BASE)
+    bad = copy.deepcopy(doc)
+    bad["schema"] = "other/v0"
+    b = _write(tmp_path, "base.json", bad)
+    c = _write(tmp_path, "cur.json", doc)
+    with pytest.raises(SystemExit):
+        perf_gate.run_gate(c, b, 0.20, 0.05)
+
+
+def test_repo_baseline_is_schema_valid():
+    """The committed BENCH_BASELINE.json must load and contain tracked rows."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    path = os.path.join(root, "BENCH_BASELINE.json")
+    rows = perf_gate.load_rows(path)
+    tracked = [n for n, r in rows.items() if r.get("us_per_call", 0) > 0]
+    assert len(tracked) >= 10
+    # the baseline must cover the new backend axis
+    assert any("pallas" in n for n in rows)
