@@ -11,8 +11,10 @@ they are stable across runner machines; wall-clock metrics such as
 
   * FAILS (exit 1) when any tracked row regresses by more than
     ``--fail-over`` (default +20% us_per_call),
-  * WARNS on regressions above ``--warn-over`` (default +5%) and on
-    tracked rows missing from the current run,
+  * FAILS when a tracked row disappears from the current run — a deleted
+    or renamed benchmark must refresh the committed baseline explicitly,
+    never fall out of the trajectory silently,
+  * WARNS on regressions above ``--warn-over`` (default +5%),
   * reports improvements and newly appearing rows informationally,
 
 and writes the delta table as GitHub-flavored markdown to
@@ -65,8 +67,9 @@ def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float):
         b = float(brec["us_per_call"])
         crec = cur.get(name)
         if crec is None:
-            warnings.append(f"tracked row disappeared: {name}")
-            entries.append((name, b, None, None, "missing"))
+            failures.append(f"tracked row disappeared: {name} "
+                            "(refresh BENCH_BASELINE.json if intentional)")
+            entries.append((name, b, None, None, "MISSING"))
             continue
         c = float(crec["us_per_call"])
         delta = c / b - 1.0
@@ -94,7 +97,7 @@ def markdown_table(entries, limit: int = 40) -> str:
         bs = f"{b:.4f}" if b is not None else "—"
         cs = f"{c:.4f}" if c is not None else "—"
         ds = f"{d * 100:+.1f}%" if d is not None else "—"
-        mark = {"FAIL": "❌", "warn": "⚠️", "missing": "⚠️",
+        mark = {"FAIL": "❌", "warn": "⚠️", "MISSING": "❌",
                 "new": "🆕", "ok": ""}.get(v, "")
         lines.append(f"| `{name}` | {bs} | {cs} | {ds} | {mark} {v} |")
     if len(entries) > limit:

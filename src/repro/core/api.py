@@ -103,9 +103,12 @@ class Allocator:
         PimMallocState layout); strawman has no thread caches to merge."""
         if self.cfg.kind == "strawman":
             return
+        # gc moves fully-free cached blocks back to the buddy: live bytes
+        # are unchanged, so the telemetry counters carry over as-is
         self.state = SystemState(
             alloc=pim_malloc.gc(self.cfg.pm, self.state.alloc),
             cache=self.state.cache,
+            telem=self.state.telem,
         )
 
     @property

@@ -45,6 +45,8 @@ OP_CALLOC = 4
 OP_NAMES = {OP_NOOP: "noop", OP_MALLOC: "malloc", OP_FREE: "free",
             OP_REALLOC: "realloc", OP_CALLOC: "calloc"}
 
+NULL_PTR = -1  # the protocol's NULL: free(-1) is benign, alloc failure returns it
+
 
 class AllocRequest(NamedTuple):
     """One batched request round: one op per hardware thread.
@@ -116,20 +118,43 @@ def malloc_request(sizes, active=None) -> AllocRequest:
 
 
 def free_request(ptrs, active=None) -> AllocRequest:
+    """free(ptr) with C semantics: NULL (== -1) frees are benign no-ops;
+    every other pointer — including garbage negatives and out-of-heap
+    offsets — is passed through so the backend can count it against
+    `Stats.dropped_frees` (path 2) instead of silently vanishing."""
     ptrs = jnp.asarray(ptrs, jnp.int32)
-    on = _mask(active, ptrs.shape) & (ptrs >= 0)
+    on = _mask(active, ptrs.shape) & (ptrs != NULL_PTR)
     return AllocRequest(op=jnp.where(on, OP_FREE, OP_NOOP).astype(jnp.int32),
                         size=jnp.zeros_like(ptrs),
                         ptr=jnp.where(on, ptrs, -1))
 
 
 def realloc_request(ptrs, sizes, active=None) -> AllocRequest:
+    """realloc(ptr, size) with C semantics, enforced for every backend:
+
+      * ptr < 0, size > 0   -> plain malloc(size)   (realloc(NULL, n))
+      * ptr >= 0, size == 0 -> free(ptr)            (realloc(p, 0))
+      * ptr < 0, size == 0  -> NOOP                 (realloc(NULL, 0))
+      * size < 0            -> failing request: size_t-negative means a
+        huge allocation, so the op keeps REALLOC/MALLOC form with an
+        unsatisfiable INT32_MAX size — it fails (path 3) and a live old
+        block stays intact, exactly like C realloc on failure.
+    """
     ptrs = jnp.asarray(ptrs, jnp.int32)
     sizes = jnp.asarray(sizes, jnp.int32)
+    ptrs, sizes = jnp.broadcast_arrays(ptrs, sizes)
     on = _mask(active, ptrs.shape)
-    return AllocRequest(op=jnp.where(on, OP_REALLOC, OP_NOOP).astype(jnp.int32),
-                        size=jnp.where(on, sizes, 0),
-                        ptr=jnp.where(on, ptrs, -1))
+    eff = jnp.where(sizes < 0, jnp.int32(jnp.iinfo(jnp.int32).max), sizes)
+    has_ptr = ptrs >= 0
+    op = jnp.where(
+        ~on, OP_NOOP,
+        jnp.where(has_ptr & (eff > 0), OP_REALLOC,
+                  jnp.where(has_ptr, OP_FREE,
+                            jnp.where(eff > 0, OP_MALLOC, OP_NOOP))))
+    keep_ptr = on & has_ptr
+    return AllocRequest(op=op.astype(jnp.int32),
+                        size=jnp.where(on & (eff > 0), eff, 0),
+                        ptr=jnp.where(keep_ptr, ptrs, -1))
 
 
 def calloc_request(nmemb, sizes, active=None) -> AllocRequest:
@@ -251,16 +276,31 @@ class MultiCoreHeap:
         return resp
 
     # vmap (rather than relying on builder broadcasting) so a per-core
-    # [C]-shaped active mask keeps masking whole cores, not thread slots
+    # [C]-shaped active mask keeps masking whole cores, not thread slots —
+    # the same contract for all four builders (pinned in tests/test_heap_api)
+    def _core_mask(self, active):
+        if active is None:
+            return None
+        return jnp.broadcast_to(jnp.asarray(active, bool), (self.num_cores,))
+
+    def _v(self, build, *args, active=None):
+        return self.step(jax.vmap(build)(*args, self._core_mask(active)))
+
     def malloc(self, sizes, active=None) -> AllocResponse:
-        return self.step(jax.vmap(malloc_request)(
-            jnp.asarray(sizes, jnp.int32),
-            None if active is None else jnp.asarray(active, bool)))
+        return self._v(malloc_request, jnp.asarray(sizes, jnp.int32),
+                       active=active)
 
     def free(self, ptrs, active=None) -> AllocResponse:
-        return self.step(jax.vmap(free_request)(
-            jnp.asarray(ptrs, jnp.int32),
-            None if active is None else jnp.asarray(active, bool)))
+        return self._v(free_request, jnp.asarray(ptrs, jnp.int32),
+                       active=active)
+
+    def realloc(self, ptrs, sizes, active=None) -> AllocResponse:
+        return self._v(realloc_request, jnp.asarray(ptrs, jnp.int32),
+                       jnp.asarray(sizes, jnp.int32), active=active)
+
+    def calloc(self, nmemb, sizes, active=None) -> AllocResponse:
+        return self._v(calloc_request, jnp.asarray(nmemb, jnp.int32),
+                       jnp.asarray(sizes, jnp.int32), active=active)
 
 
 # ---------------------------------------------------------------------------
@@ -345,18 +385,31 @@ class ShardedHeap:
 
     # vmap twice (rather than relying on builder broadcasting) so [R]- or
     # [R, C]-shaped active masks keep masking ranks/cores, not thread slots
-    def _vv(self, build, *args):
-        return self.step(jax.vmap(jax.vmap(build))(*args))
+    # (an [R] mask broadcasts to [R, C] first — the double vmap needs the
+    # mask pre-shaped to the grid)
+    def _grid_mask(self, active):
+        if active is None:
+            return None
+        m = jnp.asarray(active, bool)
+        m = m.reshape(m.shape + (1,) * (2 - m.ndim))
+        return jnp.broadcast_to(m, (self.num_ranks, self.num_cores))
+
+    def _vv(self, build, *args, active=None):
+        return self.step(jax.vmap(jax.vmap(build))(
+            *args, self._grid_mask(active)))
 
     def malloc(self, sizes, active=None) -> AllocResponse:
         return self._vv(malloc_request, jnp.asarray(sizes, jnp.int32),
-                        None if active is None else jnp.asarray(active, bool))
+                        active=active)
 
     def free(self, ptrs, active=None) -> AllocResponse:
         return self._vv(free_request, jnp.asarray(ptrs, jnp.int32),
-                        None if active is None else jnp.asarray(active, bool))
+                        active=active)
 
     def realloc(self, ptrs, sizes, active=None) -> AllocResponse:
         return self._vv(realloc_request, jnp.asarray(ptrs, jnp.int32),
-                        jnp.asarray(sizes, jnp.int32),
-                        None if active is None else jnp.asarray(active, bool))
+                        jnp.asarray(sizes, jnp.int32), active=active)
+
+    def calloc(self, nmemb, sizes, active=None) -> AllocResponse:
+        return self._vv(calloc_request, jnp.asarray(nmemb, jnp.int32),
+                        jnp.asarray(sizes, jnp.int32), active=active)

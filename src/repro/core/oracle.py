@@ -180,7 +180,10 @@ class PyPimMalloc:
             active = [True] * T
         for t in range(T):
             ptr = ptrs[t]
-            if not active[t] or ptr < 0 or ptr >= self.cfg["heap"]:
+            if not active[t] or ptr == -1:   # NULL free: benign no-op
+                continue
+            if ptr < 0 or ptr >= self.cfg["heap"]:
+                self.stats["dropped"] += 1   # garbage pointer
                 continue
             b = ptr // block
             c = self.block_cls.get(b, -1)
@@ -196,6 +199,8 @@ class PyPimMalloc:
                 self.buddy.free(ptr, 1 << self.big_log2[b])
                 del self.big_log2[b]
                 self.stats["frees_big"] += 1
+            else:
+                self.stats["dropped"] += 1   # untracked / double free
 
     def gc(self, max_gc=8):
         block = self.cfg["block"]

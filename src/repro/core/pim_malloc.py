@@ -299,12 +299,23 @@ def malloc(cfg: PimMallocConfig, st: PimMallocState, sizes, active=None):
 
 
 def free(cfg: PimMallocConfig, st: PimMallocState, ptrs, active=None):
-    """pimFree(ptr) batched over threads: size recovered from block metadata."""
+    """pimFree(ptr) batched over threads: size recovered from block metadata.
+
+    C-like misuse accounting: a NULL free (ptr == -1) is a benign no-op
+    (path -1); any other requested free that cannot be served — negative
+    garbage, out-of-heap offsets, pointers in untracked blocks, double
+    frees of bypass blocks, or a freelist at capacity — is *dropped*
+    (path 2) and counted in `Stats.dropped_frees` so workload replays
+    surface allocator misuse. (Detection is block-granularity: a double
+    free of a sub-block whose 4 KB block is still cache-owned cannot be
+    distinguished from a legitimate free and is served as a push.)
+    """
     T = cfg.num_threads
     assert ptrs.shape == (T,)
     if active is None:
         active = jnp.ones((T,), bool)
-    active = active & (ptrs >= 0) & (ptrs < cfg.heap_bytes)
+    requested = active & (ptrs != -1)
+    active = requested & (ptrs >= 0) & (ptrs < cfg.heap_bytes)
     t_idx = jnp.arange(T, dtype=jnp.int32)
     tlen = cfg.buddy_cfg.trace_len
 
@@ -348,11 +359,12 @@ def free(cfg: PimMallocConfig, st: PimMallocState, ptrs, active=None):
     carry, (lv_up, trace, bpos) = lax.scan(step, carry, (big, ptrs, b))
     bstate, big_log2, _ = carry
 
-    path = jnp.where(push, 0, jnp.where(big, 1, jnp.where(overflow, 2, INVALID)))
+    dropped = requested & ~push & ~big
+    path = jnp.where(push, 0, jnp.where(big, 1, jnp.where(dropped, 2, INVALID)))
     stats = st.stats._replace(
         frees_small=st.stats.frees_small + jnp.sum(push),
         frees_big=st.stats.frees_big + jnp.sum(big),
-        dropped_frees=st.stats.dropped_frees + jnp.sum(overflow),
+        dropped_frees=st.stats.dropped_frees + jnp.sum(dropped),
     )
     new_st = PimMallocState(
         buddy=bstate, counts=counts, stacks=stacks, block_cls=st.block_cls,

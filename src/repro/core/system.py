@@ -116,10 +116,14 @@ def strawman_malloc(cfg: StrawmanConfig, st: StrawmanState, sizes, active=None):
 
 
 def strawman_free(cfg: StrawmanConfig, st: StrawmanState, ptrs, active=None):
+    """Strawman free round. Same misuse accounting as `pim_malloc.free`:
+    NULL (-1) frees are benign no-ops (path -1); any other requested free
+    that is out of range or untracked is dropped (path 2)."""
     T = cfg.num_threads
     if active is None:
         active = jnp.ones((T,), bool)
-    active = active & (ptrs >= 0) & (ptrs < cfg.heap_bytes)
+    requested = active & (ptrs != INVALID)
+    active = requested & (ptrs >= 0) & (ptrs < cfg.heap_bytes)
     tlen = cfg.buddy_cfg.trace_len
 
     def step(carry, x):
@@ -146,7 +150,8 @@ def strawman_free(cfg: StrawmanConfig, st: StrawmanState, ptrs, active=None):
     carry = (st.buddy, st.leaf_log2, jnp.int32(0))
     carry, (lv_up, trace, bpos) = lax.scan(step, carry, (active, ptrs))
     bstate, leaf_log2, _ = carry
-    path = jnp.where(bpos >= 0, 1, INVALID).astype(jnp.int32)
+    dropped = requested & (bpos < 0)
+    path = jnp.where(bpos >= 0, 1, jnp.where(dropped, 2, INVALID)).astype(jnp.int32)
     ev = pim_malloc.FreeEvent(path=path, backend_pos=bpos, levels_up=lv_up,
                               trace=trace)
     return StrawmanState(buddy=bstate, leaf_log2=leaf_log2), ev
@@ -198,9 +203,41 @@ class SystemConfig:
         return self.sw_buf.line_bytes
 
 
+class HeapTelemetry(NamedTuple):
+    """Per-core heap-health counters, advanced on every protocol round.
+
+    Rounded (size-class / pow2) bytes, i.e. allocator-side occupancy, not
+    user-requested bytes. For any well-formed request stream the
+    conservation law
+
+        live_bytes + buddy free bytes + cached thread-cache bytes
+            == heap_bytes
+
+    holds after every round (pinned in tests/test_telemetry.py); the two
+    snapshot terms come from `repro.core.telemetry`. Both counters are
+    identical across backends — the deltas are computed in `_price_round`,
+    which every kind (including ``pallas``) goes through.
+    """
+
+    live_bytes: jnp.ndarray  # int32[] rounded bytes currently handed out
+    hwm_bytes: jnp.ndarray   # int32[] high-water mark of live_bytes
+
+
+def telemetry_init() -> HeapTelemetry:
+    z = jnp.int32(0)
+    return HeapTelemetry(live_bytes=z, hwm_bytes=z)
+
+
+def _advance_telemetry(t: HeapTelemetry, alloc_bytes, freed_bytes):
+    live = t.live_bytes + alloc_bytes - freed_bytes
+    return HeapTelemetry(live_bytes=live,
+                         hwm_bytes=jnp.maximum(t.hwm_bytes, live))
+
+
 class SystemState(NamedTuple):
     alloc: object            # PimMallocState | StrawmanState
     cache: object            # BuddyCacheState | SWBufferState
+    telem: HeapTelemetry     # fragmentation/utilization counters
 
 
 class RoundInfo(NamedTuple):
@@ -217,7 +254,8 @@ def system_init(cfg: SystemConfig, prepopulate: bool = True) -> SystemState:
         alloc = strawman_init(cfg.straw)
     else:
         alloc = pim_malloc.init(cfg.pm, prepopulate=prepopulate)
-    return SystemState(alloc=alloc, cache=cfg.cache_init())
+    return SystemState(alloc=alloc, cache=cfg.cache_init(),
+                       telem=telemetry_init())
 
 
 def _cache_pass(cfg: SystemConfig, cache_st, backend_pos, traces):
@@ -290,7 +328,7 @@ def _protocol_round(cfg: SystemConfig, st: SystemState, req: AllocRequest,
     traces = jnp.concatenate([mev.trace, fev.trace], axis=0)
     cache_st, tstats = _cache_pass(cfg, st.cache, bpos, traces)
     T = op.shape[0]
-    resp = _price_round(
+    resp, alloc_bytes, freed_bytes = _price_round(
         cfg, req, mptrs=mptrs, m_path=mev.path, m_bpos=mev.backend_pos,
         m_lvdown=mev.levels_down, m_lvup=mev.levels_up, fpath=fpath,
         f_bpos=fev.backend_pos, f_lvup=fev.levels_up,
@@ -300,19 +338,23 @@ def _protocol_round(cfg: SystemConfig, st: SystemState, req: AllocRequest,
         in_place=in_place, moved=moved, mok=mok, valid_old=meta.valid_old,
         old_bytes=meta.old_bytes, new_bytes=meta.new_bytes,
         re_free0=re_free0)
-    return SystemState(alloc=alloc_st, cache=cache_st), resp
+    telem = _advance_telemetry(st.telem, alloc_bytes, freed_bytes)
+    return SystemState(alloc=alloc_st, cache=cache_st, telem=telem), resp
 
 
 def _price_round(cfg: SystemConfig, req: AllocRequest, *, mptrs, m_path,
                  m_bpos, m_lvdown, m_lvup, fpath, f_bpos, f_lvup, hits_m,
                  miss_m, dram_m, hits_f, miss_f, dram_f, in_place, moved,
                  mok, valid_old, old_bytes, new_bytes, re_free0):
-    """Price one protocol round and assemble the AllocResponse.
+    """Price one protocol round; returns (AllocResponse, alloc_bytes,
+    freed_bytes) — the heap-telemetry deltas of the round in rounded
+    allocator bytes (see :class:`HeapTelemetry`).
 
     Shared by every backend: the scan-based rounds feed it the metadata
     cache sim's per-op stats, the ``pallas`` backend feeds it the fused
-    kernel's in-kernel counters. Identical counters => identical latencies,
-    which is what pins the kernel path bitwise to the ``hwsw`` reference.
+    kernel's in-kernel counters. Identical counters => identical latencies
+    and telemetry, which is what pins the kernel path bitwise to the
+    ``hwsw`` reference.
     """
     op, size, ptr = req.op, req.size, req.ptr
     is_alloc = (op == OP_MALLOC) | (op == OP_CALLOC)
@@ -365,12 +407,25 @@ def _price_round(cfg: SystemConfig, req: AllocRequest, *, mptrs, m_path,
     path = jnp.where(m_active, m_path,
                      jnp.where(is_free | re_free0, fpath,
                                jnp.where(in_place, 0, INVALID)))
-    return AllocResponse(
+    # heap-telemetry deltas: rounded bytes handed out / returned this round
+    # (new_bytes/old_bytes come from the kind's realloc-meta rounding, which
+    # matches the malloc/free paths' actual placement sizes)
+    new_alloc = (is_alloc & mok) | (moved & mok)
+    alloc_bytes = jnp.sum(jnp.where(new_alloc, new_bytes, 0))
+    # every free-phase participant — explicit frees, realloc(p, 0), and a
+    # moved realloc's vacated old block — only returns bytes when the free
+    # actually served (fpath 0/1): a capacity-dropped push (fpath 2) leaks
+    # the block, which must stay in live_bytes for conservation to hold
+    freed_served = ((is_free | re_free0 | (moved & mok & valid_old))
+                    & ((fpath == 0) | (fpath == 1)))
+    freed_bytes = jnp.sum(jnp.where(freed_served, old_bytes, 0))
+    resp = AllocResponse(
         ptr=out_ptr, ok=ok, path=path.astype(jnp.int32), moved=moved & mok,
         latency_cyc=latency, backend_cyc=cyc_m + cyc_f,
         meta_hits=hits_m + hits_f, meta_misses=miss_m + miss_f,
         dram_bytes=dram_m + dram_f,
     )
+    return resp, alloc_bytes, freed_bytes
 
 
 @heap.register("strawman")
@@ -380,7 +435,7 @@ def _step_strawman(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         malloc_fn=lambda s, z, a: strawman_malloc(cfg.straw, s, z, a),
         free_fn=lambda s, p, a: strawman_free(cfg.straw, s, p, a),
         meta_fn=lambda s, p, z: _strawman_realloc_meta(cfg.straw, s, p, z),
-        free_path_fn=lambda ev: jnp.where(ev.backend_pos >= 0, 1, INVALID),
+        free_path_fn=lambda ev: ev.path,
     )
 
 
@@ -424,7 +479,6 @@ def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
     m_okb = out.m_okb.astype(bool)
     f_push = out.f_push.astype(bool)
     f_big = out.f_big.astype(bool)
-    f_over = out.f_over.astype(bool)
     in_place = out.in_place.astype(bool)
     moved = out.moved_raw.astype(bool)
     valid_old = out.valid_old.astype(bool)
@@ -439,11 +493,15 @@ def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
                   jnp.where(m_bypass & m_okb, 2,
                             jnp.where(need | too_big, 3, INVALID)))
     ).astype(jnp.int32)
-    fpath = jnp.where(f_push, 0,
-                      jnp.where(f_big, 1,
-                                jnp.where(f_over, 2, INVALID))).astype(jnp.int32)
     mok = m_active & (out.m_ptr >= 0)
     re_free0 = (req.op == OP_REALLOC) & (req.size <= 0) & (req.ptr >= 0)
+    # same misuse accounting as pim_malloc.free: every requested free that
+    # neither pushed nor reached the buddy is dropped (NULL == -1 exempt)
+    f_active = (req.op == OP_FREE) | (moved & valid_old & mok) | re_free0
+    f_drop = f_active & (req.ptr != -1) & ~f_push & ~f_big
+    fpath = jnp.where(f_push, 0,
+                      jnp.where(f_big, 1,
+                                jnp.where(f_drop, 2, INVALID))).astype(jnp.int32)
 
     stats = al.stats._replace(
         front_hits=al.stats.front_hits + jnp.sum(m_hit),
@@ -452,7 +510,7 @@ def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         fails=al.stats.fails + jnp.sum((need & ~m_okb) | too_big),
         frees_small=al.stats.frees_small + jnp.sum(f_push),
         frees_big=al.stats.frees_big + jnp.sum(f_big),
-        dropped_frees=al.stats.dropped_frees + jnp.sum(f_over),
+        dropped_frees=al.stats.dropped_frees + jnp.sum(f_drop),
     )
     new_alloc = pim_malloc.PimMallocState(
         buddy=BuddyState(longest=out.longest), counts=out.counts,
@@ -463,7 +521,7 @@ def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         clock=jnp.reshape(out.clock, ()))
 
     dma = cfg.dma_bytes_per_miss
-    resp = _price_round(
+    resp, alloc_bytes, freed_bytes = _price_round(
         cfg, req, mptrs=out.m_ptr, m_path=m_path, m_bpos=out.m_bpos,
         m_lvdown=out.m_lvdown, m_lvup=out.m_lvup, fpath=fpath,
         f_bpos=out.f_bpos, f_lvup=out.f_lvup,
@@ -471,7 +529,8 @@ def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         hits_f=out.f_hits, miss_f=out.f_miss, dram_f=out.f_miss * dma,
         in_place=in_place, moved=moved, mok=mok, valid_old=valid_old,
         old_bytes=out.old_bytes, new_bytes=out.new_bytes, re_free0=re_free0)
-    return SystemState(alloc=new_alloc, cache=new_cache), resp
+    telem = _advance_telemetry(st.telem, alloc_bytes, freed_bytes)
+    return SystemState(alloc=new_alloc, cache=new_cache, telem=telem), resp
 
 
 def _round_info(resp: AllocResponse) -> RoundInfo:

@@ -1,0 +1,122 @@
+"""Heap-health snapshots: fragmentation / utilization reporting.
+
+`SystemState.telem` (see :class:`repro.core.system.HeapTelemetry`) carries
+the round-by-round counters — live rounded bytes and their high-water mark
+— advanced inside `system._price_round` identically for every backend.
+This module derives the *snapshot* side of heap health from the metadata
+state itself:
+
+  * total buddy free bytes and the per-level histogram of maximal free
+    blocks (external fragmentation: free capacity that exists only in
+    pieces smaller than a request class),
+  * bytes parked in the thread-cache frontend (carved but not handed out),
+  * the conservation law the two sides must satisfy together:
+
+        live_bytes + free_bytes + cached_frontend_bytes == heap_bytes
+
+    for any well-formed request stream (pinned in tests/test_telemetry.py).
+
+Everything here is host-side NumPy over a state snapshot — reporting code,
+not part of the jitted step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .buddy import BuddyConfig
+
+
+def _node_levels(bcfg: BuddyConfig):
+    """(level[i], full_size[i]) for the 1-indexed longest[] array."""
+    n = bcfg.n_nodes
+    idx = np.arange(n)
+    level = np.zeros(n, np.int64)
+    level[1:] = np.floor(np.log2(idx[1:])).astype(np.int64)
+    full = np.where(idx > 0, bcfg.heap_bytes >> level, 0).astype(np.int64)
+    return level, full
+
+
+def free_block_histogram(bcfg: BuddyConfig, longest) -> np.ndarray:
+    """Count of *maximal* free blocks per buddy level.
+
+    Index ``l`` counts free blocks of exactly ``heap_bytes >> l`` bytes
+    (level 0 = the whole heap ... level ``depth`` = ``min_block``) that are
+    not contained in a larger free block. The ``longest[]`` encoding leaves
+    the descendants of an allocated node stale at their full sizes, so a
+    node only counts as free when no ancestor is allocated-as-a-block
+    (same subtlety as `buddy.free_bytes`).
+    """
+    longest = np.asarray(longest, np.int64)
+    n = bcfg.n_nodes
+    level, full = _node_levels(bcfg)
+    is_leaf = level == bcfg.depth
+    lc = np.minimum(2 * np.arange(n), n - 1)
+    rc = np.minimum(2 * np.arange(n) + 1, n - 1)
+    stale = (longest[lc] == full // 2) & (longest[rc] == full // 2)
+    is_blk = (np.arange(n) > 0) & (longest == 0) & (is_leaf | stale)
+
+    # covered[i]: some ancestor of i was allocated as a block (its stale
+    # descendants must not read as free)
+    covered = np.zeros(n, bool)
+    for lvl in range(1, bcfg.depth + 1):
+        idx = np.arange(1 << lvl, min(1 << (lvl + 1), n))
+        covered[idx] = covered[idx >> 1] | is_blk[idx >> 1]
+
+    truly_free = (np.arange(n) > 0) & (longest == full) & ~covered
+    parent_free = np.zeros(n, bool)
+    idx = np.arange(2, n)
+    parent_free[idx] = truly_free[idx >> 1]
+    maximal = truly_free & ~parent_free
+
+    hist = np.zeros(bcfg.depth + 1, np.int64)
+    np.add.at(hist, level[maximal], 1)
+    return hist
+
+
+def free_bytes_from_histogram(bcfg: BuddyConfig, hist) -> int:
+    sizes = bcfg.heap_bytes >> np.arange(len(hist))
+    return int((np.asarray(hist, np.int64) * sizes).sum())
+
+
+def frontend_cached_bytes(cfg, state) -> int:
+    """Bytes sitting free in the per-thread LIFO freelists (0 for strawman)."""
+    if cfg.kind == "strawman":
+        return 0
+    counts = np.asarray(state.alloc.counts, np.int64)
+    class_sizes = np.asarray(cfg.pm.size_classes, np.int64)
+    return int((counts * class_sizes[None, :]).sum())
+
+
+def snapshot(cfg, state) -> dict:
+    """One heap-health report from a (SystemConfig, SystemState) pair.
+
+    Plain Python numbers/lists — ready for the JSON bench schema. Keys:
+    ``live_bytes``, ``hwm_bytes``, ``free_bytes``, ``cached_frontend_bytes``,
+    ``heap_bytes``, ``utilization``, ``hwm_utilization``,
+    ``largest_free_block``, ``external_frag``, ``free_blocks_per_level``,
+    ``conservation_residual`` (0 for well-formed streams).
+    """
+    bcfg = cfg.straw.buddy_cfg if cfg.kind == "strawman" else cfg.pm.buddy_cfg
+    longest = np.asarray(state.alloc.buddy.longest)
+    hist = free_block_histogram(bcfg, longest)
+    free_b = free_bytes_from_histogram(bcfg, hist)
+    cached = frontend_cached_bytes(cfg, state)
+    live = int(np.asarray(state.telem.live_bytes))
+    hwm = int(np.asarray(state.telem.hwm_bytes))
+    largest = int(longest[1]) if longest.shape[0] > 1 else 0
+    heap = int(cfg.heap_bytes)
+    return {
+        "live_bytes": live,
+        "hwm_bytes": hwm,
+        "free_bytes": free_b,
+        "cached_frontend_bytes": cached,
+        "heap_bytes": heap,
+        "utilization": live / heap,
+        "hwm_utilization": hwm / heap,
+        "largest_free_block": largest,
+        # classic external-fragmentation metric: the share of free memory
+        # not reachable by a single largest-block request
+        "external_frag": (1.0 - largest / free_b) if free_b > 0 else 0.0,
+        "free_blocks_per_level": hist.tolist(),
+        "conservation_residual": heap - (live + free_b + cached),
+    }

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import cost_model, system as sysm
+from repro.core import api, cost_model, heap as heap_api, system as sysm
 
 NODE_BYTES = 16  # one edge cell: dst (4B) + next (4B) + padding to size class
 
@@ -87,18 +87,26 @@ def static_update_cost_us(cfg: GraphConfig, dpu: cost_model.DPUCost = None):
 
 # ------------------------------------------------- dynamic (PIM-malloc heap)
 class DynamicGraph:
-    """Array-of-linked-lists adjacency on a PIM-malloc heap (one core)."""
+    """Array-of-linked-lists adjacency on a PIM-malloc heap (one core).
 
-    def __init__(self, cfg: GraphConfig, kind: str = "sw"):
+    Every allocation round goes through one `api.Allocator`-style handle
+    (the unified heap protocol), so the whole workload — insertion AND
+    deletion — is recordable as an `AllocRequest` tape: pass a
+    `repro.workloads.trace.RecordingAllocator` as ``alloc`` to capture it.
+    """
+
+    def __init__(self, cfg: GraphConfig, kind: str = "sw", alloc=None):
         self.cfg = cfg
-        self.sys_cfg = sysm.SystemConfig(kind=kind, heap_bytes=cfg.heap_bytes,
-                                         num_threads=cfg.num_threads)
-        self.state = sysm.system_init(self.sys_cfg)
+        self.alloc = alloc if alloc is not None else api.Allocator(
+            heap_bytes=cfg.heap_bytes, num_threads=cfg.num_threads, kind=kind)
+        self.sys_cfg = self.alloc.cfg
         self.head = jnp.full((cfg.n_nodes,), -1, jnp.int32)
         self.heap = jnp.zeros((cfg.heap_bytes // 4,), jnp.int32)
-        self._malloc_round = jax.jit(
-            lambda st, sizes: sysm.malloc_round(self.sys_cfg, st, sizes))
         self._insert = jax.jit(self._insert_impl)
+
+    @property
+    def state(self):
+        return self.alloc.state
 
     @staticmethod
     def _insert_impl(heap, head, ptrs, srcs, dsts):
@@ -119,16 +127,46 @@ class DynamicGraph:
         return heap, head
 
     def insert_round(self, srcs, dsts):
-        """One batched round: up to T edges. Returns RoundInfo."""
+        """One batched round: up to T edges. Returns the AllocResponse."""
         T = self.cfg.num_threads
         n = len(srcs)
         sizes = jnp.where(jnp.arange(T) < n, NODE_BYTES, 0).astype(jnp.int32)
-        self.state, ptrs, info = self._malloc_round(self.state, sizes)
+        info = self.alloc.request(heap_api.malloc_request(sizes))
         srcs = jnp.asarray(np.pad(srcs, (0, T - n)), jnp.int32)
         dsts = jnp.asarray(np.pad(dsts, (0, T - n)), jnp.int32)
-        self.heap, self.head = self._insert(self.heap, self.head, ptrs, srcs,
-                                            dsts)
+        self.heap, self.head = self._insert(self.heap, self.head, info.ptr,
+                                            srcs, dsts)
         return info
+
+    def delete_round(self, srcs, dsts):
+        """Remove up to T edges (u, v): unlink the first matching cell from
+        u's list and pimFree its node cell. Returns the AllocResponse (a
+        miss — edge not present — frees nothing on that thread slot).
+        """
+        T = self.cfg.num_threads
+        assert len(srcs) <= T
+        heap_np = np.asarray(self.heap).copy()
+        head_np = np.asarray(self.head).copy()
+        free_ptrs = np.full((T,), -1, np.int32)
+        for t, (u, v) in enumerate(zip(srcs, dsts)):
+            u, v = int(u), int(v)
+            prev = -1
+            ptr = int(head_np[u])
+            while ptr >= 0:
+                w = ptr // 4
+                if int(heap_np[w]) == v:          # unlink this cell
+                    nxt = int(heap_np[w + 1])
+                    if prev < 0:
+                        head_np[u] = nxt
+                    else:
+                        heap_np[prev // 4 + 1] = nxt
+                    free_ptrs[t] = ptr
+                    break
+                prev, ptr = ptr, int(heap_np[w + 1])
+        self.heap = jnp.asarray(heap_np)
+        self.head = jnp.asarray(head_np)
+        return self.alloc.request(heap_api.free_request(
+            jnp.asarray(free_ptrs)))
 
     def neighbors(self, u: int):
         """Traverse u's linked list (host-side; test/verification)."""

@@ -240,13 +240,22 @@ class PagePool:
     over the data axis (see examples/serve_paged.py).
     """
 
-    def __init__(self, n_pages: int, num_threads: int = 16, kind: str = "sw"):
+    def __init__(self, n_pages: int, num_threads: int = 16, kind: str = "sw",
+                 alloc=None):
+        """``alloc`` injects an Allocator-compatible handle (heap must span
+        n_pages * PAGE_UNIT bytes) — e.g. a
+        `repro.workloads.trace.RecordingAllocator`, so serving churn can be
+        captured as an AllocRequest tape and replayed on every backend."""
         assert n_pages & (n_pages - 1) == 0, "n_pages must be pow2"
         self.n_pages = n_pages
-        self.alloc = api.Allocator(
-            heap_bytes=n_pages * PAGE_UNIT, num_threads=num_threads,
-            kind=kind,
-        )
+        if alloc is None:
+            alloc = api.Allocator(
+                heap_bytes=n_pages * PAGE_UNIT, num_threads=num_threads,
+                kind=kind,
+            )
+        assert alloc.cfg.heap_bytes == n_pages * PAGE_UNIT, \
+            (alloc.cfg.heap_bytes, n_pages * PAGE_UNIT)
+        self.alloc = alloc
         self.cfg = self.alloc.cfg.pm  # block_bytes=4096: 256-page refills
 
     def alloc_pages(self, n: int, thread: int = 0) -> jnp.ndarray:
@@ -280,6 +289,13 @@ class PagePool:
             return jnp.zeros((0,), jnp.int32), False
         moved = bool(self.alloc.last_info.moved[thread])
         return new_ptr // PAGE_UNIT + jnp.arange(n_pages, dtype=jnp.int32), moved
+
+    def free_page_batch(self, pages) -> AllocResponse:
+        """Free one page per thread slot (decode-page reclaim): pages
+        int32[T] page ids, -1 = nothing to free on that slot."""
+        pages = jnp.asarray(pages, jnp.int32)
+        ptrs = jnp.where(pages >= 0, pages * PAGE_UNIT, -1)
+        return self.alloc.request(heap.free_request(ptrs))
 
     def free_extent(self, first_page: int, thread: int = 0) -> None:
         self.alloc.pimFree(int(first_page) * PAGE_UNIT, thread=thread)

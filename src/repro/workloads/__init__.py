@@ -1,0 +1,28 @@
+"""Allocation-trace workload engine: record/replay real AllocRequest tapes.
+
+See `repro.workloads.trace` (schema + recorder), `repro.workloads.replay`
+(closed-loop replay through every `heap.REGISTRY` backend, heap-health
+reports, cross-backend parity checks) and `repro.workloads.scenarios`
+(the three representative workloads: graph churn, paged-KV serving,
+hash-table grow-rehash). CLIs: ``python -m repro.workloads.record`` /
+``python -m repro.workloads.replay``.
+"""
+from .trace import (RecordingAllocator, Trace, TRACE_SCHEMA,  # noqa: F401
+                    response_digest)
+
+_LAZY = {
+    "replay": "repro.workloads.replay",
+    "replay_all_kinds": "repro.workloads.replay",
+    "check_trace": "repro.workloads.replay",
+    "attach_expectations": "repro.workloads.replay",
+    "SCENARIOS": "repro.workloads.scenarios",
+}
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.workloads.replay` does not re-import the
+    # submodule through the package (runpy double-import warning)
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(name)

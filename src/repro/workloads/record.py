@@ -1,0 +1,50 @@
+"""Regenerate the committed workload tapes (benchmarks/tapes/*.json).
+
+    PYTHONPATH=src python -m repro.workloads.record \
+        [--out benchmarks/tapes] [--scenarios all] [--full]
+
+Records each scenario on the ``hwsw`` design point, replays it on every
+registered backend to fill the per-kind ``expect`` digests, and writes the
+JSON tapes. Commit the refreshed tapes together with whatever allocator
+change moved the digests — the CI ``workload-smoke`` step replays them
+bitwise on every PR.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.workloads.replay import attach_expectations
+from repro.workloads.scenarios import SCENARIOS
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))),
+        "benchmarks", "tapes"))
+    ap.add_argument("--scenarios", default="all")
+    ap.add_argument("--full", action="store_true",
+                    help="record the full-scale (non-smoke) variants")
+    args = ap.parse_args(argv)
+    names = (list(SCENARIOS) if args.scenarios == "all"
+             else args.scenarios.split(","))
+    os.makedirs(args.out, exist_ok=True)
+    for name in names:
+        trace = SCENARIOS[name](smoke=not args.full)
+        reports = attach_expectations(trace)
+        path = os.path.join(args.out, f"{name}.json")
+        trace.save(path)
+        ops = trace.ops
+        print(f"wrote {path}: {trace.rounds} rounds / {ops} ops; "
+              + "; ".join(
+                  f"{k}: ok={r['ok_ops']} dropped={r['dropped_frees']} "
+                  f"live={r['telemetry']['live_bytes']}"
+                  for k, r in sorted(reports.items())))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Allocation-trace schema + recorder: real `AllocRequest` tapes.
+
+A *tape* (schema ``pim-malloc-trace/v1``) is a fixed-shape sequence of
+protocol rounds captured from a real allocation-heavy workload. Pointer
+operands are stored **symbolically**: each FREE/REALLOC round carries a
+``ptr_ref`` per thread — the flat slot id ``round * T + thread`` of the
+round that *produced* the pointer being operated on (-1 = use the raw
+recorded value, e.g. a NULL or a deliberately bogus pointer). Replay
+(`repro.workloads.replay`) resolves refs against the pointers the *target*
+backend actually returned, so one tape drives every `heap.REGISTRY` kind
+closed-loop: ``sw``/``hwsw``/``pallas`` reproduce the recorded pointer
+stream bitwise, and ``strawman`` serves the same workload shape through its
+own placements.
+
+`RecordingAllocator` is a drop-in `repro.core.api.Allocator` that observes
+every `request()` round and maintains the pointer->producing-slot map, so
+existing workload drivers (`graphupd.DynamicGraph`, `kvcache.PagePool`, the
+hash-table workload) record themselves without cooperation.
+
+Tapes serialize to reviewable JSON; committed smoke tapes live in
+``benchmarks/tapes/`` (regenerate with ``python -m repro.workloads.record``)
+and carry per-backend ``expect`` digests that CI replays against
+(`workload-smoke`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core import api, heap
+
+TRACE_SCHEMA = "pim-malloc-trace/v1"
+
+# canonical dtype per AllocResponse field, in field order — digests must be
+# byte-stable across platforms
+_RESP_DTYPES = {
+    "ptr": np.int32, "ok": np.uint8, "path": np.int32, "moved": np.uint8,
+    "latency_cyc": np.float32, "backend_cyc": np.float32,
+    "meta_hits": np.int32, "meta_misses": np.int32, "dram_bytes": np.int32,
+}
+SEMANTIC_FIELDS = ("ptr", "ok", "path", "moved")
+
+
+def _canon(resp_stack, fields) -> bytes:
+    out = []
+    for f in fields:
+        arr = np.ascontiguousarray(
+            np.asarray(getattr(resp_stack, f)), _RESP_DTYPES[f])
+        out.append(arr.tobytes())
+    return b"".join(out)
+
+
+def response_digest(resp_stack, semantic_only: bool = False) -> str:
+    """sha256 over the stacked [R, T] response fields in canonical dtypes.
+
+    ``semantic_only`` restricts to (ptr, ok, path, moved) — the
+    backend-semantics fields shared by ``sw`` and ``hwsw`` (whose latency /
+    cache counters legitimately differ)."""
+    fields = SEMANTIC_FIELDS if semantic_only else tuple(_RESP_DTYPES)
+    return hashlib.sha256(_canon(resp_stack, fields)).hexdigest()
+
+
+@dataclasses.dataclass
+class Trace:
+    """One recorded workload tape (all arrays int32[R, T])."""
+
+    name: str
+    heap_bytes: int
+    num_threads: int
+    recorded_kind: str
+    description: str
+    op: np.ndarray
+    size: np.ndarray
+    ptr_ref: np.ndarray   # producing slot id (round*T + thread), -1 = raw
+    ptr_raw: np.ndarray   # concrete recorded pointer (debug / raw operand)
+    expect: dict = dataclasses.field(default_factory=dict)  # per-kind digests
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def rounds(self) -> int:
+        return int(self.op.shape[0])
+
+    @property
+    def ops(self) -> int:
+        return int((self.op != heap.OP_NOOP).sum())
+
+    def to_json(self) -> dict:
+        return {
+            "schema": TRACE_SCHEMA,
+            "name": self.name,
+            "description": self.description,
+            "heap_bytes": int(self.heap_bytes),
+            "num_threads": int(self.num_threads),
+            "recorded_kind": self.recorded_kind,
+            "rounds": {
+                "op": self.op.tolist(),
+                "size": self.size.tolist(),
+                "ptr_ref": self.ptr_ref.tolist(),
+                "ptr_raw": self.ptr_raw.tolist(),
+            },
+            "expect": self.expect,
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "Trace":
+        if doc.get("schema") != TRACE_SCHEMA:
+            raise ValueError(f"not a {TRACE_SCHEMA} document: "
+                             f"{doc.get('schema')!r}")
+        r = doc["rounds"]
+        arrs = {k: np.asarray(r[k], np.int32)
+                for k in ("op", "size", "ptr_ref", "ptr_raw")}
+        shapes = {a.shape for a in arrs.values()}
+        if len(shapes) != 1 or arrs["op"].ndim != 2:
+            raise ValueError(f"malformed rounds arrays: shapes {shapes}")
+        if arrs["op"].shape[1] != doc["num_threads"]:
+            raise ValueError("rounds thread axis != num_threads")
+        return cls(name=doc["name"], heap_bytes=doc["heap_bytes"],
+                   num_threads=doc["num_threads"],
+                   recorded_kind=doc["recorded_kind"],
+                   description=doc.get("description", ""),
+                   expect=doc.get("expect", {}), meta=doc.get("meta", {}),
+                   **arrs)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "Trace":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+class RecordingAllocator(api.Allocator):
+    """An `api.Allocator` that captures every protocol round onto a tape.
+
+    The pointer->slot map is maintained from the observed (request,
+    response) stream alone: an alloc-producing op that succeeded registers
+    its result pointer under slot ``round * T + thread``; a served free
+    (and a relocating realloc) retires the old pointer. A FREE/REALLOC
+    operand whose pointer is not currently mapped (NULL, double free,
+    garbage) records ``ptr_ref = -1`` and keeps the raw value — misuse is
+    replayed verbatim on every backend.
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._rounds = []          # (op, size, ptr_ref, ptr_raw) np[T]
+        self._ptr_slot = {}        # live concrete ptr -> producing slot id
+
+    @property
+    def recorded_rounds(self) -> int:
+        return len(self._rounds)
+
+    def request(self, req: heap.AllocRequest) -> heap.AllocResponse:
+        op = np.asarray(req.op, np.int32).copy()
+        size = np.asarray(req.size, np.int32).copy()
+        ptr = np.asarray(req.ptr, np.int32).copy()
+        if op.ndim != 1:
+            raise ValueError("RecordingAllocator records single-core [T] "
+                             f"rounds, got shape {op.shape}")
+        ptr_ref = np.full_like(ptr, -1)
+        for t in range(op.shape[0]):
+            if op[t] in (heap.OP_FREE, heap.OP_REALLOC) and ptr[t] >= 0:
+                ptr_ref[t] = self._ptr_slot.get(int(ptr[t]), -1)
+
+        resp = super().request(req)
+
+        r = len(self._rounds)
+        T = op.shape[0]
+        rptr = np.asarray(resp.ptr, np.int32)
+        rok = np.asarray(resp.ok, bool)
+        rmoved = np.asarray(resp.moved, bool)
+        for t in range(T):
+            if op[t] == heap.OP_FREE and rok[t]:
+                self._ptr_slot.pop(int(ptr[t]), None)
+            elif op[t] in (heap.OP_MALLOC, heap.OP_CALLOC) and rptr[t] >= 0:
+                self._ptr_slot[int(rptr[t])] = r * T + t
+            elif op[t] == heap.OP_REALLOC:
+                if size[t] <= 0 and ptr[t] >= 0 and rok[t]:
+                    self._ptr_slot.pop(int(ptr[t]), None)   # realloc(p, 0)
+                elif rptr[t] >= 0:
+                    if rmoved[t]:
+                        self._ptr_slot.pop(int(ptr[t]), None)
+                    self._ptr_slot[int(rptr[t])] = r * T + t
+        self._rounds.append((op, size, ptr_ref, ptr))
+        return resp
+
+    def finish(self, name: str, description: str = "", meta: dict = None
+               ) -> Trace:
+        """Freeze the recorded rounds into a Trace (no expect digests yet —
+        `repro.workloads.replay.attach_expectations` fills those)."""
+        op, size, ptr_ref, ptr_raw = (np.stack(x) for x in
+                                      zip(*self._rounds))
+        return Trace(name=name, heap_bytes=self.cfg.heap_bytes,
+                     num_threads=self.cfg.num_threads,
+                     recorded_kind=self.cfg.kind, description=description,
+                     op=op, size=size, ptr_ref=ptr_ref, ptr_raw=ptr_raw,
+                     meta=meta or {})

@@ -376,6 +376,91 @@ def test_multicore_per_core_active_mask():
     assert bool((resp.ptr[1:] == -1).all())
 
 
+# ----------------------------------------- C-semantics guards (bugfix pins)
+def test_realloc_request_builder_normalizes_c_semantics():
+    """realloc(NULL, n) -> MALLOC; realloc(p, 0) -> FREE;
+    realloc(NULL, 0) -> NOOP; negative size -> failing INT32_MAX request."""
+    req = heap.realloc_request(jnp.array([-1, 10, -1, 10], jnp.int32),
+                               jnp.array([64, 0, 0, -5], jnp.int32))
+    assert req.op.tolist() == [heap.OP_MALLOC, heap.OP_FREE, heap.OP_NOOP,
+                               heap.OP_REALLOC]
+    assert req.size.tolist()[3] == np.iinfo(np.int32).max
+    assert req.ptr.tolist() == [-1, 10, -1, 10]
+
+
+@pytest.mark.parametrize("kind", sysm.KINDS)
+def test_realloc_negative_size_fails_and_keeps_old_block(kind):
+    """A negative realloc size must FAIL (C size_t semantics), never free
+    or shrink the live block — identical across all four KINDS."""
+    cfg = _cfg(kind)
+    st = heap.init(cfg)
+    st, r0 = heap.step(cfg, st, heap.malloc_request(
+        jnp.full((T,), 100, jnp.int32)))
+    st, r1 = heap.step(cfg, st, heap.realloc_request(
+        r0.ptr, jnp.full((T,), -3, jnp.int32)))
+    assert all(int(p) == -1 for p in r1.ptr)
+    assert not any(bool(x) for x in r1.ok)
+    assert all(int(p) == 3 for p in r1.path)          # failing alloc path
+    # old blocks stayed live: freeing them succeeds on every thread
+    st, r2 = heap.step(cfg, st, heap.free_request(r0.ptr))
+    assert all(bool(x) for x in r2.ok)
+
+
+@pytest.mark.parametrize("kind", sysm.KINDS)
+def test_invalid_frees_are_counted_dropped(kind):
+    """free(-1) is benign (NULL); any other unserviceable free is path 2
+    and (on pim kinds) lands in Stats.dropped_frees."""
+    cfg = _cfg(kind)
+    st = heap.init(cfg)
+    st, r = heap.step(cfg, st, heap.free_request(
+        jnp.array([-1, -9, 2 * HEAP, HEAP - 32], jnp.int32)))
+    # NULL -> idle; garbage negative / out-of-heap / untracked -> dropped
+    assert int(r.path[0]) == -1 and not bool(r.ok[0])
+    assert [int(p) for p in r.path[1:]] == [2, 2, 2]
+    assert not any(bool(x) for x in r.ok[1:])
+    if kind != "strawman":
+        assert int(st.alloc.stats.dropped_frees) == 3
+
+
+def test_multicore_realloc_calloc_per_core_active_mask():
+    """The realloc/calloc wrappers honor the same [C]-mask contract as
+    malloc/free: a [C]-shaped mask selects whole cores, not thread slots."""
+    C = 3
+    cfg = sysm.SystemConfig(kind="sw", heap_bytes=1 << 18, num_threads=T)
+    mch = heap.MultiCoreHeap(cfg, num_cores=C)
+    r0 = mch.malloc(jnp.full((C, T), 100, jnp.int32))
+    mask = jnp.array([True, False, False])
+    r1 = mch.realloc(r0.ptr, jnp.full((C, T), 300, jnp.int32), active=mask)
+    assert bool(r1.moved[0].all()) and bool((r1.ptr[0] >= 0).all())
+    assert bool((r1.ptr[1:] == -1).all())
+    r2 = mch.calloc(jnp.full((C, T), 4, jnp.int32),
+                    jnp.full((C, T), 16, jnp.int32),
+                    active=jnp.array([False, True, False]))
+    assert bool((r2.ptr[1] >= 0).all())
+    assert bool((r2.ptr[0] == -1).all()) and bool((r2.ptr[2] == -1).all())
+    # masked cores kept their original blocks live
+    r3 = mch.free(r0.ptr, active=~mask)
+    assert bool(r3.ok[1:].all())
+
+
+def test_sharded_realloc_calloc_rank_and_grid_masks():
+    """ShardedHeap realloc/calloc accept [R]- and [R, C]-shaped masks
+    (rank-level masks broadcast across the core axis)."""
+    R, C = 2, 2
+    cfg = sysm.SystemConfig(kind="sw", heap_bytes=1 << 18, num_threads=T)
+    sh = heap.ShardedHeap(cfg, num_ranks=R, num_cores=C, mesh=False)
+    r0 = sh.malloc(jnp.full((R, C, T), 64, jnp.int32))
+    r1 = sh.realloc(r0.ptr, jnp.full((R, C, T), 2048, jnp.int32),
+                    active=jnp.array([True, False]))          # [R] mask
+    assert bool(r1.moved[0].all()) and bool((r1.ptr[1] == -1).all())
+    r2 = sh.calloc(jnp.full((R, C, T), 8, jnp.int32),
+                   jnp.full((R, C, T), 16, jnp.int32),
+                   active=jnp.array([[True, False],
+                                     [False, True]]))         # [R, C] mask
+    ok = np.asarray(r2.ptr >= 0).all(axis=-1)
+    np.testing.assert_array_equal(ok, [[True, False], [False, True]])
+
+
 def test_request_builders_accept_batched_and_scalar_shapes():
     """Builders produce consistent pytree leaves on [R, C, T] batches and
     on broadcast scalar arguments (all leaves share one shape)."""

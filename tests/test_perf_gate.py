@@ -57,15 +57,26 @@ def test_gate_warns_but_passes_between_thresholds(tmp_path, capsys):
     assert "Warnings" in out and "+10.0%" in out
 
 
-def test_gate_tolerates_missing_and_new_rows(tmp_path, capsys):
+def test_gate_fails_on_missing_tracked_row(tmp_path, capsys):
+    """A tracked baseline row that disappears is a hard failure — silent
+    coverage loss must refresh the committed baseline explicitly."""
     cur = dict(BASE)
     del cur["fig14/pallas/size=32"]                 # tracked row vanished
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 1
+    out = capsys.readouterr().out
+    assert "disappeared" in out and "MISSING" in out
+
+
+def test_gate_tolerates_new_rows(tmp_path, capsys):
+    cur = dict(BASE)
     cur["fig14/newrow"] = 0.5                       # new row appeared
     b = _write(tmp_path, "base.json", _doc(BASE))
     c = _write(tmp_path, "cur.json", _doc(cur))
-    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0  # warns, doesn't fail
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
     out = capsys.readouterr().out
-    assert "disappeared" in out and "newrow" in out
+    assert "newrow" in out
 
 
 def test_gate_fails_when_current_figure_errored(tmp_path, capsys):
