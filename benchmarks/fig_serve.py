@@ -1,0 +1,73 @@
+"""fleet_serve: the closed-loop multi-tenant serving benchmark.
+
+Runs `repro.launch.serve_fleet.FleetServe` sessions — Poisson arrivals,
+Zipf tenants, bounded admission queue — over the [R, C, T] fleet and emits
+one row per placement policy plus an overload (backpressure) cell:
+
+  * ``us_per_call``    — modeled us per dispatched op (gated by perf_gate)
+  * ``p50/p95/p99``    — end-to-end latency percentiles in modeled DPU
+                         cycles (queue wait through round barriers + own
+                         service latency), plus service-only percentiles
+  * ``queue_depth_*``  — backlog time-series summary
+  * ``drop_rate``      — share of external arrivals rejected at the full
+                         admission queue (nonzero only under overload)
+
+All modeled metrics are deterministic functions of (seed, traffic config,
+cost model), so every row is stable across runner machines and trackable
+by the perf gate; only ``wall_s`` is wall-clock (never gated).
+"""
+import time
+
+from repro.core import system as sysm
+from repro.launch.serve_fleet import TrafficConfig, serve_session
+
+from .common import emit
+
+POLICIES = ("round_robin", "least_loaded", "chunked")
+
+
+def _row(name, rep, wall, **extra):
+    return emit(
+        name, rep["us_per_op"],
+        f"p99={rep['e2e_p99_cyc']:.0f}cyc;drop={rep['drop_rate']:.2f};"
+        f"q={rep['queue_depth_mean']:.1f}", backend="sw",
+        p50_cyc=rep["e2e_p50_cyc"], p95_cyc=rep["e2e_p95_cyc"],
+        p99_cyc=rep["e2e_p99_cyc"], service_p50_cyc=rep["service_p50_cyc"],
+        service_p99_cyc=rep["service_p99_cyc"],
+        queue_depth_mean=rep["queue_depth_mean"],
+        queue_depth_max=rep["queue_depth_max"], drop_rate=rep["drop_rate"],
+        offered=rep["offered"], dropped=rep["dropped"],
+        dispatched=rep["dispatched"], failed_allocs=rep["failed_allocs"],
+        ops_per_sec=rep["ops_per_sec"], wall_s=wall, **extra)
+
+
+def bench(smoke: bool = False):
+    if smoke:
+        R, C, T, rounds, rate = 2, 2, 4, 32, 10.0
+    else:
+        R, C, T, rounds, rate = 2, 4, 16, 96, 64.0
+    cfg = sysm.SystemConfig(kind="sw", heap_bytes=1 << 19, num_threads=T)
+    recs = []
+
+    # steady-state sessions, one per placement policy (same traffic tape)
+    for pol in POLICIES:
+        tc = TrafficConfig(seed=17, rounds=rounds, arrival_rate=rate,
+                           num_tenants=4 * R * C, queue_cap=8 * R * C)
+        t0 = time.time()
+        rep = serve_session(cfg, R, C, traffic=tc, placement=pol)
+        recs.append(_row(f"fleet_serve/sw/placement={pol}", rep,
+                         time.time() - t0))
+
+    # overload cell: arrivals at ~3x capacity against a tight queue — the
+    # backpressure path (nonzero drop_rate) stays on the perf trajectory
+    tc = TrafficConfig(seed=23, rounds=rounds, arrival_rate=3.0 * R * C * T,
+                       num_tenants=2 * R * C, queue_cap=2 * R * C)
+    t0 = time.time()
+    rep = serve_session(cfg, R, C, traffic=tc, placement="least_loaded")
+    recs.append(_row("fleet_serve/sw/overload", rep, time.time() - t0))
+    assert rep["drop_rate"] > 0, "overload cell no longer overloads"
+    return recs
+
+
+def run():
+    bench()

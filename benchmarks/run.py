@@ -24,7 +24,7 @@ import sys
 import time
 
 ALL = ("fig5", "fig6", "fig7", "fig14", "fig15", "fig16", "fig_fleet",
-       "workloads", "roofline")
+       "fleet_serve", "workloads", "roofline")
 SCHEMA = "pim-malloc-bench/v1"
 # per-record attribution stamps (the only non-numeric record fields besides
 # name/derived): allocator design point and jax version
@@ -38,6 +38,7 @@ _MODULES = {
     "fig15": "fig15_cache_size",
     "fig16": "fig16_graph",
     "fig_fleet": "fig_fleet",
+    "fleet_serve": "fig_serve",
     "workloads": "fig_workloads",
     "roofline": "roofline",
 }

@@ -321,6 +321,35 @@ def sharded_step(cfg, states, requests: AllocRequest):
     return jax.vmap(functools.partial(multicore_step, cfg))(states, requests)
 
 
+def sharded_inner(cfg, num_ranks: int, mesh=None, axis_name: str = "ranks"):
+    """Build the fleet-round step fn([R,C]-state, [R,C,T]-request).
+
+    The one place the mesh plumbing lives: returns ``(fn, mesh)`` where `fn`
+    is :func:`sharded_step` wrapped in ``shard_map`` over a 1-D rank mesh
+    (``mesh=None`` builds one over the local devices; ``mesh=False`` skips
+    shard_map — the pure-vmap fallback, with ``mesh`` returned as None).
+    Shared by :class:`ShardedHeap` (one round per call) and the FleetServe
+    scan driver (`repro.launch.serve_fleet`, many rounds per call), so both
+    tiers serve bitwise-identical results from the same transform stack.
+    """
+    inner = functools.partial(sharded_step, cfg)
+    if mesh is None:
+        from repro.parallel.meshctx import make_rank_mesh
+        mesh = make_rank_mesh(num_ranks, axis_name)
+    if mesh is False:
+        return inner, None
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    axis_name = mesh.axis_names[0]
+    if num_ranks % mesh.shape[axis_name]:
+        raise ValueError(
+            f"num_ranks={num_ranks} not divisible by mesh axis "
+            f"{axis_name}={mesh.shape[axis_name]}")
+    spec = PartitionSpec(axis_name)
+    return shard_map(inner, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec), check_rep=False), mesh
+
+
 class ShardedHeap:
     """R ranks x C cores of independent heaps behind one [R, C, T] entry point.
 
@@ -348,24 +377,8 @@ class ShardedHeap:
         self.num_cores = num_cores
         self.state = sharded_init(cfg, num_ranks, num_cores,
                                   prepopulate=prepopulate)
-        inner = functools.partial(sharded_step, cfg)
-        if mesh is None:
-            from repro.parallel.meshctx import make_rank_mesh
-            mesh = make_rank_mesh(num_ranks, axis_name)
-        if mesh is False:
-            self.mesh = None
-        else:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import PartitionSpec
-            axis_name = mesh.axis_names[0]
-            if num_ranks % mesh.shape[axis_name]:
-                raise ValueError(
-                    f"num_ranks={num_ranks} not divisible by mesh axis "
-                    f"{axis_name}={mesh.shape[axis_name]}")
-            spec = PartitionSpec(axis_name)
-            inner = shard_map(inner, mesh=mesh, in_specs=(spec, spec),
-                              out_specs=(spec, spec), check_rep=False)
-            self.mesh = mesh
+        inner, self.mesh = sharded_inner(cfg, num_ranks, mesh=mesh,
+                                         axis_name=axis_name)
         self.donate = donate
         self._step = jax.jit(inner, donate_argnums=(0,) if donate else ())
 

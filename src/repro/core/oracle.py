@@ -175,32 +175,127 @@ class PyPimMalloc:
         return ptrs, paths
 
     def free(self, ptrs, active=None):
+        """One batched free round; returns per-thread paths mirroring
+        `core.pim_malloc.free`: 0 push / 1 big / 2 dropped / -1 idle (NULL
+        frees are benign no-ops)."""
         T, block, cap = self.cfg["T"], self.cfg["block"], self.cfg["cap"]
         if active is None:
             active = [True] * T
+        paths = [-1] * T
         for t in range(T):
             ptr = ptrs[t]
             if not active[t] or ptr == -1:   # NULL free: benign no-op
                 continue
             if ptr < 0 or ptr >= self.cfg["heap"]:
                 self.stats["dropped"] += 1   # garbage pointer
+                paths[t] = 2
                 continue
             b = ptr // block
             c = self.block_cls.get(b, -1)
             if c >= 0:
                 if self.counts[t][c] >= cap:
                     self.stats["dropped"] += 1
+                    paths[t] = 2
                     continue
                 self.stacks[t][c].append(ptr)
                 self.counts[t][c] += 1
                 self.block_free[b] = self.block_free.get(b, 0) + 1
                 self.stats["frees_small"] += 1
+                paths[t] = 0
             elif self.big_log2.get(b, -1) >= 0 and ptr % block == 0:
                 self.buddy.free(ptr, 1 << self.big_log2[b])
                 del self.big_log2[b]
                 self.stats["frees_big"] += 1
+                paths[t] = 1
             else:
                 self.stats["dropped"] += 1   # untracked / double free
+                paths[t] = 2
+        return paths
+
+    # ------------------------------------------------------------------
+    # full protocol rounds (the differential-fuzzing oracle surface)
+    # ------------------------------------------------------------------
+    def _realloc_meta(self, ptr: int, size: int):
+        """(valid_old, in_place, old_bytes, new_bytes) for one pointer —
+        mirrors `core.pim_malloc.realloc_meta`."""
+        heap, block = self.cfg["heap"], self.cfg["block"]
+        classes = self.cfg["classes"]
+        valid = 0 <= ptr < heap
+        b = ptr // block if valid else 0
+        cls = self.block_cls.get(b, -1) if valid else -1
+        small_old = valid and cls >= 0
+        big_old = (valid and cls < 0 and self.big_log2.get(b, -1) >= 0
+                   and ptr % block == 0)
+        old = (classes[cls] if small_old
+               else (1 << self.big_log2[b]) if big_old else 0)
+        new_small = size <= classes[-1]
+        new = (classes[self._class_of(size)] if new_small
+               else max(_next_pow2(size), block))
+        in_place = (((small_old and new_small) or (big_old and not new_small))
+                    and new == old)
+        return small_old or big_old, in_place, old, new
+
+    def request(self, op, size, ptr):
+        """Serve one mixed-op protocol round (the semantic half of
+        `system._protocol_round`): per-thread MALLOC / FREE / REALLOC /
+        CALLOC / NOOP with the same two-phase order — batched malloc for
+        new blocks (incl. relocating reallocs), then batched free (explicit
+        frees, realloc(p, 0), vacated realloc blocks).
+
+        Returns {"ptr", "ok", "path", "moved"} per-thread lists — the
+        semantic AllocResponse fields every backend must agree on
+        (tests/test_differential_fuzz.py pins hwsw == this oracle).
+        """
+        T = self.cfg["T"]
+        OP_MALLOC, OP_FREE, OP_REALLOC, OP_CALLOC = 1, 2, 3, 4
+        is_alloc = [o in (OP_MALLOC, OP_CALLOC) for o in op]
+        is_re = [o == OP_REALLOC for o in op]
+        is_free = [o == OP_FREE for o in op]
+
+        meta = [self._realloc_meta(ptr[t], size[t]) for t in range(T)]
+        valid_old = [m[0] for m in meta]
+        re_live = [is_re[t] and size[t] > 0 for t in range(T)]
+        in_place = [re_live[t] and meta[t][1] for t in range(T)]
+        moved = [re_live[t] and not meta[t][1] for t in range(T)]
+        re_free0 = [is_re[t] and size[t] <= 0 and ptr[t] >= 0
+                    for t in range(T)]
+
+        m_active = [(is_alloc[t] and size[t] > 0) or moved[t]
+                    for t in range(T)]
+        mptrs, mpaths = self.malloc(
+            [size[t] if m_active[t] else 0 for t in range(T)], m_active)
+        mok = [m_active[t] and mptrs[t] >= 0 for t in range(T)]
+
+        f_active = [is_free[t] or (moved[t] and valid_old[t] and mok[t])
+                    or re_free0[t] for t in range(T)]
+        fpaths = self.free(
+            [ptr[t] if f_active[t] else -1 for t in range(T)], f_active)
+
+        out_ptr, ok, path, moved_out = [], [], [], []
+        for t in range(T):
+            if is_alloc[t] and mok[t]:
+                p = mptrs[t]
+            elif in_place[t]:
+                p = ptr[t]
+            elif moved[t] and mok[t]:
+                p = mptrs[t]
+            else:
+                p = -1
+            out_ptr.append(p)
+            ok.append((is_alloc[t] and mok[t]) or in_place[t]
+                      or (moved[t] and mok[t])
+                      or ((is_free[t] or re_free0[t])
+                          and fpaths[t] in (0, 1)))
+            if m_active[t]:
+                path.append(mpaths[t])
+            elif is_free[t] or re_free0[t]:
+                path.append(fpaths[t])
+            elif in_place[t]:
+                path.append(0)
+            else:
+                path.append(-1)
+            moved_out.append(moved[t] and mok[t])
+        return {"ptr": out_ptr, "ok": ok, "path": path, "moved": moved_out}
 
     def gc(self, max_gc=8):
         block = self.cfg["block"]

@@ -1,4 +1,4 @@
-"""Fleet-level request router over a ShardedHeap.
+"""Fleet-level request routing over a ShardedHeap: placement + accounting.
 
 The deployment story of the scaling claim: a service front-end holds a flat
 stream of allocation requests; the router scatters them onto the fleet's
@@ -11,11 +11,25 @@ accounting fleet-wide and per rank.
     router = FleetRouter(heap)
     resp = router.route(request_RCT)          # pre-batched [R, C, T] round
     out = router.route_flat(op, size, ptr)    # flat stream, any N <= R*C*T
+    out = router.route_flat(op, size, ptr, placement="least_loaded")
     router.stats                              # totals + per-rank breakdown
 
-Placement is slot-order (row-major over ranks, then cores, then threads):
-request i lands on rank i // (C*T) — contiguous chunks per rank, matching
-how a rank-of-ranks management layer (SimplePIM-style) hands work to DPUs.
+Three pieces are deliberately standalone so the closed-loop serving tier
+(`repro.launch.serve_fleet`) shares them instead of reimplementing:
+
+  * **placement** — the :data:`PLACEMENTS` registry maps a policy name to a
+    slot policy ``fn(n, shape, loads=None, start=0) -> int array [n]`` of
+    flat grid slot ids (slot ``(r, c, t)`` has id ``(r*C + c)*T + t``), and
+    :func:`tenant_core` derives a sticky (rank, core) homing for the i-th
+    admitted tenant under the same policy names (a tenant's frees/reallocs
+    must hit the heap that served its mallocs — cores are independent);
+  * **scatter/gather** — :func:`scatter_slots` / :func:`gather_slots` place
+    a flat stream onto arbitrary slots and invert it exactly
+    (:func:`scatter_flat` / :func:`gather_flat` are the contiguous
+    chunked special case, pinned as exact inverses in
+    tests/test_fleet_serve.py);
+  * **accounting** — :class:`FleetAccounting` accumulates
+    `system.fleet_accounting` rounds into fleet totals + per-rank series.
 """
 from __future__ import annotations
 
@@ -27,27 +41,133 @@ from repro.core import system as sysm
 from repro.core.heap import AllocRequest, AllocResponse
 
 
-def scatter_flat(op, size, ptr, shape: tuple) -> AllocRequest:
-    """Flat per-request arrays (length N <= R*C*T) -> one [R, C, T] round.
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+def place_chunked(n: int, shape: tuple, loads=None, start: int = 0):
+    """Contiguous row-major slots: request i -> slot start + i (mod cap).
 
-    Unfilled slots become NOOPs; slot order is row-major, so `gather_flat`
-    with the same N is the exact inverse.
+    The original FleetRouter behavior — rank 0's cores fill first, matching
+    a SimplePIM-style management layer handing contiguous work chunks to
+    DPUs."""
+    R, C, T = shape
+    return (start + np.arange(n, dtype=np.int64)) % (R * C * T)
+
+
+def place_round_robin(n: int, shape: tuple, loads=None, start: int = 0):
+    """Stripe across ranks first, then cores, then thread slots: consecutive
+    requests land on different ranks, spreading a small burst fleet-wide."""
+    R, C, T = shape
+    i = start + np.arange(n, dtype=np.int64)
+    rank = i % R
+    core = (i // R) % C
+    th = (i // (R * C)) % T
+    return (rank * C + core) * T + th
+
+
+def place_least_loaded(n: int, shape: tuple, loads=None, start: int = 0):
+    """Fill the thread slots of the least-loaded (rank, core) first.
+
+    ``loads`` is a [R, C] (or flat [R*C]) per-core load signal — live bytes,
+    outstanding ops, whatever the caller tracks; ties break row-major. With
+    no loads this degrades to chunked."""
+    R, C, T = shape
+    if loads is None:
+        return place_chunked(n, shape, start=start)
+    order = np.argsort(np.asarray(loads, np.float64).reshape(-1),
+                       kind="stable")
+    slots = (order[:, None] * T + np.arange(T)[None, :]).reshape(-1)
+    if n > slots.shape[0]:
+        raise ValueError(f"{n} requests > fleet capacity {R * C * T}")
+    return slots[:n].astype(np.int64)
+
+
+PLACEMENTS = {
+    "chunked": place_chunked,
+    "round_robin": place_round_robin,
+    "least_loaded": place_least_loaded,
+}
+
+
+def tenant_core(policy: str, i: int, shape: tuple, loads=None,
+                expected_tenants: int = None) -> tuple:
+    """Sticky (rank, core) homing for the i-th admitted tenant.
+
+    All of a tenant's ops must reach the SAME per-core heap (pointers are
+    core-local), so the serving tier places tenants, not single requests:
+
+      * ``chunked``      — contiguous tenant blocks per core in row-major
+        order (block size ``ceil(expected_tenants / (R*C))``, default 1);
+      * ``round_robin``  — tenant i -> rank i % R, core (i // R) % C;
+      * ``least_loaded`` — the core with the smallest ``loads`` entry
+        (falls back to chunked blocks when no loads are tracked yet).
+
+    A policy registered in :data:`PLACEMENTS` without a homing rule here is
+    an error — it must not silently degrade to chunked homing.
     """
+    R, C, T = shape
+    if policy not in PLACEMENTS:
+        raise ValueError(f"unknown placement {policy!r} "
+                         f"(have {tuple(PLACEMENTS)})")
+    if policy == "round_robin":
+        return int(i % R), int((i // R) % C)
+    if policy == "least_loaded" and loads is not None:
+        flat = int(np.argmin(np.asarray(loads, np.float64).reshape(-1)))
+        return flat // C, flat % C
+    if policy not in ("chunked", "least_loaded"):
+        raise ValueError(f"no tenant-homing rule for placement {policy!r}")
+    chunk = max(1, -(-int(expected_tenants or R * C) // (R * C)))
+    j = (i // chunk) % (R * C)
+    return j // C, j % C
+
+
+# ---------------------------------------------------------------------------
+# scatter / gather
+# ---------------------------------------------------------------------------
+def scatter_slots(op, size, ptr, shape: tuple, slots) -> AllocRequest:
+    """Flat per-request arrays -> one [R, C, T] round at explicit grid slots.
+
+    ``slots`` are distinct flat slot ids (see module docstring); unfilled
+    slots become NOOPs. ``gather_slots`` with the same slots is the exact
+    inverse."""
     R, C, T = shape
     total = R * C * T
     op = np.asarray(op, np.int32)
+    slots = np.asarray(slots, np.int64)
     n = op.shape[0]
+    if slots.shape[0] != n:
+        raise ValueError(f"{n} requests but {slots.shape[0]} slots")
     if n > total:
         raise ValueError(f"{n} requests > fleet capacity {total} ({shape})")
+    if n and (slots.min() < 0 or slots.max() >= total):
+        raise ValueError(f"slot ids out of range [0, {total})")
+    if np.unique(slots).shape[0] != n:
+        raise ValueError("duplicate slot ids in one round")
 
     def pad(x, fill):
-        x = np.asarray(x, np.int32)
         out = np.full((total,), fill, np.int32)
-        out[:n] = x
+        out[slots] = np.asarray(x, np.int32)
         return jnp.asarray(out.reshape(R, C, T))
 
     return AllocRequest(op=pad(op, heap_api.OP_NOOP), size=pad(size, 0),
                         ptr=pad(ptr, -1))
+
+
+def gather_slots(resp: AllocResponse, slots) -> dict:
+    """[R, C, T] response -> flat arrays in the original request order."""
+    slots = np.asarray(slots, np.int64)
+    return {f: np.asarray(getattr(resp, f)).reshape(-1)[slots]
+            for f in AllocResponse._fields}
+
+
+def scatter_flat(op, size, ptr, shape: tuple) -> AllocRequest:
+    """Flat per-request arrays (length N <= R*C*T) -> one [R, C, T] round.
+
+    Unfilled slots become NOOPs; slot order is row-major (chunked), so
+    `gather_flat` with the same N is the exact inverse.
+    """
+    n = np.asarray(op, np.int32).shape[0]
+    return scatter_slots(op, size, ptr, shape, place_chunked(n, shape))
 
 
 def gather_flat(resp: AllocResponse, n: int) -> dict:
@@ -56,32 +176,24 @@ def gather_flat(resp: AllocResponse, n: int) -> dict:
             for f in AllocResponse._fields}
 
 
-class FleetRouter:
-    """Scatter/step/gather driver + cost accounting for one ShardedHeap."""
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+class FleetAccounting:
+    """Accumulates `system.fleet_accounting` rounds: totals + per-rank."""
 
-    def __init__(self, heap: heap_api.ShardedHeap):
-        self.heap = heap
+    TOTALS = ("ops", "ok", "latency_cyc", "backend_cyc", "meta_hits",
+              "meta_misses", "dram_bytes")
+
+    def __init__(self, num_ranks: int):
         self.rounds = 0
-        self.totals = {k: 0.0 for k in
-                       ("ops", "ok", "latency_cyc", "backend_cyc",
-                        "meta_hits", "meta_misses", "dram_bytes")}
-        self.per_rank_latency_cyc = np.zeros(heap.num_ranks)
-        self.per_rank_ops = np.zeros(heap.num_ranks, np.int64)
-        self.per_rank_dram_bytes = np.zeros(heap.num_ranks, np.int64)
+        self.totals = {k: 0.0 for k in self.TOTALS}
+        self.per_rank_latency_cyc = np.zeros(num_ranks)
+        self.per_rank_ops = np.zeros(num_ranks, np.int64)
+        self.per_rank_dram_bytes = np.zeros(num_ranks, np.int64)
 
-    @property
-    def shape(self) -> tuple:
-        return self.heap.shape
-
-    @property
-    def capacity(self) -> int:
-        """Requests servable per round: one per fleet hardware thread."""
-        R, C, T = self.shape
-        return R * C * T
-
-    def route(self, request: AllocRequest) -> AllocResponse:
-        """Serve one pre-batched [R, C, T] round and account for it."""
-        resp = self.heap.step(request)
+    def add_round(self, request: AllocRequest, resp: AllocResponse) -> dict:
+        """Account one [R, C, T] round; returns the round's accounting."""
         acct = sysm.fleet_accounting(request, resp)
         self.rounds += 1
         for k in self.totals:
@@ -90,28 +202,18 @@ class FleetRouter:
         if pr:
             self.per_rank_latency_cyc += np.asarray(pr["latency_cyc"])
             self.per_rank_ops += np.asarray(pr["ops"], np.int64)
-            self.per_rank_dram_bytes += np.asarray(pr["dram_bytes"], np.int64)
-        return resp
+            self.per_rank_dram_bytes += np.asarray(pr["dram_bytes"],
+                                                   np.int64)
+        return acct
 
-    def route_flat(self, op, size, ptr) -> dict:
-        """Serve a flat request stream; returns flat response arrays + the
-        full AllocResponse under 'resp'."""
-        n = np.asarray(op).shape[0]
-        resp = self.route(scatter_flat(op, size, ptr, self.shape))
-        out = gather_flat(resp, n)
-        out["resp"] = resp
-        return out
-
-    @property
-    def stats(self) -> dict:
-        """Accumulated fleet accounting across all routed rounds."""
-        freq = self.heap.cfg.dpu.freq_hz
+    def summary(self, freq_hz: float) -> dict:
+        """Accumulated fleet accounting across all added rounds."""
         ops = max(self.totals["ops"], 1)
         return {
             "rounds": self.rounds,
             **{k: (int(v) if k not in ("latency_cyc", "backend_cyc")
                    else float(v)) for k, v in self.totals.items()},
-            "us_per_op": self.totals["latency_cyc"] / ops / freq * 1e6,
+            "us_per_op": self.totals["latency_cyc"] / ops / freq_hz * 1e6,
             "dram_bytes_per_op": self.totals["dram_bytes"] / ops,
             "per_rank": {
                 "ops": self.per_rank_ops.tolist(),
@@ -119,3 +221,76 @@ class FleetRouter:
                 "dram_bytes": self.per_rank_dram_bytes.tolist(),
             },
         }
+
+
+class FleetRouter:
+    """Scatter/step/gather driver + cost accounting for one ShardedHeap."""
+
+    def __init__(self, heap: heap_api.ShardedHeap):
+        self.heap = heap
+        self.acct = FleetAccounting(heap.num_ranks)
+        self._core_ops = np.zeros((heap.num_ranks, heap.num_cores), np.int64)
+
+    @property
+    def shape(self) -> tuple:
+        return self.heap.shape
+
+    @property
+    def rounds(self) -> int:
+        return self.acct.rounds
+
+    @property
+    def capacity(self) -> int:
+        """Requests servable per round: one per fleet hardware thread."""
+        R, C, T = self.shape
+        return R * C * T
+
+    @property
+    def core_loads(self) -> np.ndarray:
+        """[R, C] cumulative routed-op counts — the default load signal for
+        ``least_loaded`` placement (activity, not residency: the router has
+        no pointer lifetime knowledge; the serving tier tracks live bytes)."""
+        return self._core_ops
+
+    def route(self, request: AllocRequest) -> AllocResponse:
+        """Serve one pre-batched [R, C, T] round and account for it."""
+        resp = self.heap.step(request)
+        self.acct.add_round(request, resp)
+        self._core_ops += (np.asarray(request.op)
+                           != heap_api.OP_NOOP).sum(axis=2)
+        return resp
+
+    def route_flat(self, op, size, ptr, placement: str = "chunked",
+                   slots=None) -> dict:
+        """Serve a flat request stream; returns flat response arrays + the
+        full AllocResponse under 'resp' and the grid slots used under
+        'slots'. ``placement`` picks the slot policy (:data:`PLACEMENTS`)
+        used to spread the stream over the grid.
+
+        Pointer locality: a FREE/REALLOC must reach the core that produced
+        its pointer. ``chunked``/``round_robin`` are pure functions of the
+        request index, so a free stream in the same order as its alloc
+        stream lands on the same cores; ``least_loaded`` is *stateful*
+        (loads change between rounds), so pointer-carrying streams must pin
+        their placement by passing the alloc round's returned ``slots``
+        back via ``slots=`` — the tenant-sticky serving tier
+        (`repro.launch.serve_fleet`) exists for exactly this reason."""
+        n = np.asarray(op).shape[0]
+        if slots is None:
+            if placement == "least_loaded" and np.any(np.asarray(ptr) >= 0):
+                raise ValueError(
+                    "least_loaded placement is stateful: pointer-carrying "
+                    "streams (FREE/REALLOC) must pin the producing round's "
+                    "slots via slots= or they may land on the wrong core")
+            slots = PLACEMENTS[placement](n, self.shape,
+                                          loads=self.core_loads)
+        resp = self.route(scatter_slots(op, size, ptr, self.shape, slots))
+        out = gather_slots(resp, slots)
+        out["resp"] = resp
+        out["slots"] = slots
+        return out
+
+    @property
+    def stats(self) -> dict:
+        """Accumulated fleet accounting across all routed rounds."""
+        return self.acct.summary(self.heap.cfg.dpu.freq_hz)

@@ -63,7 +63,16 @@ def _replay_scan(cfg, state, op, size, ptr_ref, ptr_raw):
                         slots[jnp.clip(ref_r, 0, R * T - 1)], raw_r)
         st, resp = heap.step(cfg, st, AllocRequest(op=op_r, size=size_r,
                                                    ptr=ptr))
-        slots = lax.dynamic_update_slice(slots, resp.ptr, (r * T,))
+        # a slot records the op's SURVIVING pointer: a failed relocating
+        # realloc leaves the old block intact (C contract), so later refs
+        # to the realloc slot must resolve to the still-live old pointer,
+        # not NULL. (Recorded tapes never ref failed-realloc slots — the
+        # recorder keeps the old producing slot — so this only changes
+        # resolution for planner-generated sessions, e.g. FleetServe.)
+        survived = ((op_r == heap.OP_REALLOC) & (size_r > 0)
+                    & (resp.ptr < 0) & (ptr >= 0))
+        slots = lax.dynamic_update_slice(
+            slots, jnp.where(survived, ptr, resp.ptr), (r * T,))
         return (st, slots), resp
 
     (state, _), resps = lax.scan(

@@ -1,6 +1,7 @@
 """Unit + property tests for the tensorized buddy allocator."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from conftest import hypothesis_or_skip
 
@@ -119,6 +120,88 @@ def test_no_overlap_invariant(ops):
         ivs = sorted((o, o + max(s, 32)) for o, s in live)
         for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
             assert a1 <= b0, ivs
+
+
+def _fill_then_free_permuted(cfg, rnd_seed, permute, sizes_pool):
+    """Alloc until the heap is exhausted, then free every block in an
+    adversarial permutation, asserting the no-overlap invariant throughout.
+    Returns the final state."""
+    import random
+
+    rng = random.Random(rnd_seed)
+    alloc = jax.jit(lambda s, z: buddy.alloc(cfg, s, z))
+    free = jax.jit(lambda s, o, z: buddy.free(cfg, s, o, z))
+    st_ = buddy.init(cfg)
+    live = []
+    while True:
+        size = rng.choice(sizes_pool)
+        st_, off, _ = alloc(st_, jnp.int32(size))
+        if int(off) < 0:
+            st_, off, _ = alloc(st_, jnp.int32(cfg.min_block))
+            if int(off) < 0:
+                break                       # not even min_block fits: full
+            size = cfg.min_block
+        live.append((int(off), size))
+        # live blocks never overlap (rounded extents)
+        ivs = sorted((o, o + max(1 << (s - 1).bit_length(), cfg.min_block))
+                     for o, s in live)
+        for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+            assert a1 <= b0, ivs
+    assert int(buddy.free_bytes(cfg, st_)) == 0    # genuinely full
+
+    order = permute(list(range(len(live))), rng)
+    for i in order:
+        off, size = live[i]
+        st_, ev = free(st_, jnp.int32(off), jnp.int32(size))
+        assert bool(ev.ok), (off, size)
+    return st_
+
+
+_PERMUTERS = {
+    "shuffled": lambda idx, rng: rng.sample(idx, len(idx)),
+    "reversed": lambda idx, rng: idx[::-1],
+    "inorder": lambda idx, rng: idx,
+    # adversarial interleave: alternately from both ends, so coalescing
+    # partners arrive as far apart in time as possible
+    "interleaved": lambda idx, rng: [idx[i // 2] if i % 2 == 0
+                                     else idx[-1 - i // 2]
+                                     for i in range(len(idx))],
+}
+
+
+@pytest.mark.parametrize("permuter", sorted(_PERMUTERS))
+@pytest.mark.parametrize("seed", (0, 7))
+def test_full_cycle_restores_fresh_histogram(permuter, seed):
+    """Coalescing invariant: after a full alloc-then-permuted-free cycle the
+    per-level maximal-free-block histogram equals a fresh heap's — every
+    split is undone no matter the free order."""
+    from repro.core import telemetry
+
+    cfg = buddy.BuddyConfig(heap_bytes=1 << 13, min_block=32)
+    st_ = _fill_then_free_permuted(cfg, seed, _PERMUTERS[permuter],
+                                   [32, 64, 100, 256, 512, 1000])
+    fresh = telemetry.free_block_histogram(cfg, buddy.init(cfg).longest)
+    hist = telemetry.free_block_histogram(cfg, st_.longest)
+    np.testing.assert_array_equal(hist, fresh)
+    assert fresh[0] == 1 and fresh.sum() == 1      # one maximal whole-heap block
+    assert int(st_.longest[1]) == cfg.heap_bytes
+    np.testing.assert_array_equal(np.asarray(st_.longest),
+                                  np.asarray(buddy.init(cfg).longest))
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(st.integers(0, 2**31 - 1), st.permutations(list(range(6))))
+def test_property_permuted_free_restores_histogram(seed, size_order):
+    """Any full alloc/permuted-free cycle over any size mix coalesces back
+    to the fresh-heap histogram, with no live-block overlap on the way."""
+    from repro.core import telemetry
+
+    pool = [[32, 64, 128, 256, 512, 1024][i] for i in size_order]
+    cfg = buddy.BuddyConfig(heap_bytes=1 << 12, min_block=32)
+    st_ = _fill_then_free_permuted(cfg, seed, _PERMUTERS["shuffled"], pool)
+    np.testing.assert_array_equal(
+        telemetry.free_block_histogram(cfg, st_.longest),
+        telemetry.free_block_histogram(cfg, buddy.init(cfg).longest))
 
 
 def test_vmap_over_cores():

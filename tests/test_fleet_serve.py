@@ -1,0 +1,278 @@
+"""FleetServe (closed-loop serving tier) + fleet placement/scatter pieces.
+
+The serving refactor must not be able to silently reorder responses —
+scatter/gather are pinned as exact inverses at the capacity boundaries —
+and the serve loop must honor the queueing contract: bounded admission,
+drop accounting that balances, deterministic seeded sessions, tenant-sticky
+placement, and per-core trace export that replays bitwise.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import heap, system as sysm
+from repro.launch import fleet
+from repro.launch.serve_fleet import FleetServe, TrafficConfig, serve_session
+from repro.workloads.replay import replay
+
+T = 4
+HEAP = 1 << 19
+SHAPE = (2, 2, T)
+CAP = 2 * 2 * T
+
+
+def _cfg(kind="sw"):
+    return sysm.SystemConfig(kind=kind, heap_bytes=HEAP, num_threads=T)
+
+
+def _tc(**kw):
+    base = dict(seed=3, rounds=24, arrival_rate=8.0, num_tenants=10,
+                queue_cap=32)
+    base.update(kw)
+    return TrafficConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# scatter/gather: exact inverses at the capacity boundaries
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [0, 1, CAP - 1, CAP])
+@pytest.mark.parametrize("placement", sorted(fleet.PLACEMENTS))
+def test_scatter_gather_exact_inverse(n, placement):
+    """For every N in {0, 1, capacity-1, capacity} and every slot policy,
+    gather(scatter(stream)) == stream field-for-field, and untouched slots
+    are NOOPs — the serve loop cannot silently reorder responses."""
+    rng = np.random.RandomState(n + 17)
+    op = rng.choice([heap.OP_MALLOC, heap.OP_FREE, heap.OP_REALLOC,
+                     heap.OP_CALLOC], n).astype(np.int32)
+    size = rng.randint(0, 1 << 14, n).astype(np.int32)
+    ptr = rng.randint(-1, 1 << 16, n).astype(np.int32)
+    loads = rng.rand(SHAPE[0], SHAPE[1])
+    slots = fleet.PLACEMENTS[placement](n, SHAPE, loads=loads)
+    assert len(np.unique(slots)) == n              # distinct slots
+    req = fleet.scatter_slots(op, size, ptr, SHAPE, slots)
+    for field, flat, fill in (("op", op, heap.OP_NOOP), ("size", size, 0),
+                              ("ptr", ptr, -1)):
+        grid = np.asarray(getattr(req, field)).reshape(-1)
+        np.testing.assert_array_equal(grid[slots], flat)
+        mask = np.ones(CAP, bool)
+        mask[slots] = False
+        assert (grid[mask] == fill).all()
+
+
+def test_route_flat_least_loaded_guards_pointer_streams():
+    """Stateful placement + unpinned pointer-carrying ops is a misroute
+    hazard: route_flat must refuse unless the caller pins slots=."""
+    router = fleet.FleetRouter(heap.ShardedHeap(_cfg(), 2, 2))
+    n = 4
+    out = router.route_flat(np.full(n, heap.OP_MALLOC, np.int32),
+                            np.full(n, 256, np.int32),
+                            np.full(n, -1, np.int32),
+                            placement="least_loaded")
+    with pytest.raises(ValueError):
+        router.route_flat(np.full(n, heap.OP_FREE, np.int32),
+                          np.zeros(n, np.int32), out["ptr"],
+                          placement="least_loaded")
+    # pinning the producing round's slots routes the frees correctly
+    out2 = router.route_flat(np.full(n, heap.OP_FREE, np.int32),
+                             np.zeros(n, np.int32), out["ptr"],
+                             placement="least_loaded", slots=out["slots"])
+    assert out2["ok"].all()
+
+
+def test_failed_realloc_slot_resolves_to_surviving_pointer():
+    """C contract end to end: when a relocating realloc fails, the old
+    block survives — a later ref to the realloc's slot must reach it, so
+    the block is freed, not leaked as a NULL no-op."""
+    from repro.workloads.trace import Trace
+
+    T_ = 2
+    rounds = 3
+    op = np.zeros((rounds, T_), np.int32)
+    size = np.zeros_like(op)
+    ref = np.full_like(op, -1)
+    raw = np.full_like(op, -1)
+    op[0, 0], size[0, 0] = heap.OP_MALLOC, 8192          # bypass block
+    op[1, 0], size[1, 0], ref[1, 0] = heap.OP_REALLOC, HEAP * 2, 0
+    op[2, 0], ref[2, 0] = heap.OP_FREE, 1 * T_ + 0       # ref realloc slot
+    tr = Trace(name="failed_realloc", heap_bytes=HEAP, num_threads=T_,
+               recorded_kind="hwsw", description="", op=op, size=size,
+               ptr_ref=ref, ptr_raw=raw)
+    resps, state, rep = replay(tr, "hwsw")
+    ok = np.asarray(resps.ok)
+    path = np.asarray(resps.path)
+    assert not ok[1, 0] and path[1, 0] == 3              # realloc failed
+    assert ok[2, 0] and path[2, 0] == 1                  # old block freed
+    assert rep["telemetry"]["live_bytes"] == 0           # nothing leaked
+    assert rep["telemetry"]["conservation_residual"] == 0
+
+
+def test_scatter_rejects_over_capacity_and_bad_slots():
+    over = CAP + 1
+    z = np.zeros(over, np.int32)
+    with pytest.raises(ValueError):
+        fleet.scatter_flat(z, z, z, SHAPE)
+    z2 = np.zeros(2, np.int32)
+    with pytest.raises(ValueError):                # duplicate slots
+        fleet.scatter_slots(z2, z2, z2, SHAPE, np.array([1, 1]))
+    with pytest.raises(ValueError):                # out-of-range slot
+        fleet.scatter_slots(z2, z2, z2, SHAPE, np.array([0, CAP]))
+    with pytest.raises(ValueError):                # length mismatch
+        fleet.scatter_slots(z2, z2, z2, SHAPE, np.array([0]))
+
+
+def test_gather_flat_is_chunked_inverse_through_a_live_round():
+    """End to end through a real heap: flat -> grid -> step -> flat keeps
+    request order for the boundary N values."""
+    for n in (1, CAP - 1, CAP):
+        router = fleet.FleetRouter(heap.ShardedHeap(_cfg(), 2, 2))
+        sizes = ((np.arange(n) % 5 + 1) * 32).astype(np.int32)
+        out = router.route_flat(np.full(n, heap.OP_MALLOC, np.int32), sizes,
+                                np.full(n, -1, np.int32))
+        assert out["ptr"].shape == (n,) and (out["ptr"] >= 0).all()
+        out2 = router.route_flat(np.full(n, heap.OP_FREE, np.int32),
+                                 np.zeros(n, np.int32), out["ptr"])
+        assert out2["ok"].all()
+
+
+# --------------------------------------------------------------------------
+# placement policies
+# --------------------------------------------------------------------------
+def test_round_robin_stripes_across_ranks():
+    slots = fleet.place_round_robin(4, SHAPE)
+    ranks = slots // (SHAPE[1] * T)
+    assert sorted(ranks.tolist()) == [0, 0, 1, 1]
+    assert len(set(slots.tolist())) == 4
+
+
+def test_least_loaded_fills_lightest_core_first():
+    loads = np.array([[5.0, 0.0], [3.0, 1.0]])
+    slots = fleet.place_least_loaded(T + 1, SHAPE, loads=loads)
+    # core (0,1) is lightest: its T slots first, then core (1,1)
+    assert (slots[:T] // T == 1).all()
+    assert slots[T] // T == 3
+
+
+def test_tenant_core_policies():
+    assert fleet.tenant_core("round_robin", 0, SHAPE) == (0, 0)
+    assert fleet.tenant_core("round_robin", 1, SHAPE) == (1, 0)
+    assert fleet.tenant_core("round_robin", 2, SHAPE) == (0, 1)
+    loads = np.array([[4.0, 2.0], [9.0, 1.0]])
+    assert fleet.tenant_core("least_loaded", 0, SHAPE, loads=loads) == (1, 1)
+    # chunked: contiguous tenant blocks per core (8 tenants over 4 cores)
+    homes = [fleet.tenant_core("chunked", i, SHAPE, expected_tenants=8)
+             for i in range(8)]
+    assert homes == [(0, 0), (0, 0), (0, 1), (0, 1),
+                     (1, 0), (1, 0), (1, 1), (1, 1)]
+    with pytest.raises(ValueError):
+        fleet.tenant_core("nope", 0, SHAPE)
+
+
+# --------------------------------------------------------------------------
+# the serve loop
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("placement", ("round_robin", "least_loaded"))
+def test_serve_session_accounting_balances(placement):
+    rep = serve_session(_cfg(), 2, 2, traffic=_tc(), placement=placement)
+    # every external arrival is dropped, dispatched, or still queued
+    ext_left = rep["offered"] - rep["dropped"] - rep["external_dispatched"]
+    assert 0 <= ext_left <= rep["backlog_end"]
+    assert rep["dispatched"] == (rep["external_dispatched"]
+                                 + rep["expiry_frees_dispatched"])
+    assert rep["ops"] == rep["dispatched"]         # one grid slot per op
+    assert rep["conservation_residual"] == 0
+    assert rep["accounting"]["ops"] == rep["ops"]
+    assert rep["external_queue_depth_max"] <= 32   # the admission bound
+    # percentile ordering
+    assert (rep["e2e_p50_cyc"] <= rep["e2e_p95_cyc"] <= rep["e2e_p99_cyc"])
+    assert rep["service_p99_cyc"] <= rep["e2e_p99_cyc"] + 1e-6
+    assert len(rep["queue_depth"]) == rep["rounds"]
+
+
+def test_serve_underload_never_drops():
+    rep = serve_session(_cfg(), 2, 2, placement="round_robin",
+                        traffic=_tc(arrival_rate=2.0, rounds=32,
+                                    queue_cap=64))
+    assert rep["dropped"] == 0 and rep["drop_rate"] == 0.0
+    assert rep["queue_depth_max"] <= 64
+
+
+def test_serve_overload_applies_backpressure():
+    rep = serve_session(_cfg(), 1, 1, placement="chunked",
+                        traffic=_tc(arrival_rate=16.0, rounds=20,
+                                    queue_cap=8))
+    assert rep["dropped"] > 0
+    assert 0.0 < rep["drop_rate"] <= 1.0
+    assert sum(rep["drops_per_round"]) == rep["dropped"]
+    # the admission queue itself never exceeds its bound (the combined
+    # backlog series also counts never-droppable expiry frees, hence the
+    # dedicated external series)
+    assert rep["external_queue_depth_max"] <= 8
+
+
+def test_serve_deterministic_in_seed():
+    a = serve_session(_cfg(), 2, 2, traffic=_tc(seed=11))
+    b = serve_session(_cfg(), 2, 2, traffic=_tc(seed=11))
+    assert a == b
+    c = serve_session(_cfg(), 2, 2, traffic=_tc(seed=12))
+    assert c["queue_depth"] != a["queue_depth"] or c["offered"] != a["offered"]
+
+
+def test_serve_tenant_stickiness():
+    """Every op of a tenant lands on the tenant's home core."""
+    eng = FleetServe(_cfg(), 2, 2, traffic=_tc(rounds=20),
+                     placement="round_robin")
+    plan = eng.plan()
+    C = eng.num_cores
+    for k, (rk, ck) in plan.tenant_home.items():
+        sel = plan.tenant == k
+        cores = plan.slot[sel] // T
+        assert (cores == rk * C + ck).all()
+
+
+def test_serve_trace_export_replays_bitwise():
+    """Each core's exported tape replays through the workloads engine with
+    responses bitwise-equal to the serve scan's slice of that core."""
+    cfg = _cfg("hwsw")
+    eng = FleetServe(cfg, 2, 2, traffic=_tc(rounds=20, arrival_rate=10.0),
+                     placement="least_loaded")
+    plan = eng.plan()
+    _, resps = eng.run(plan)
+    checked = 0
+    for rk in range(2):
+        for ck in range(2):
+            tr = eng.trace(plan, rk, ck)
+            if tr.ops == 0:
+                continue
+            r2, _, _ = replay(tr, "hwsw")
+            for f in ("ptr", "ok", "path", "moved", "latency_cyc"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(resps, f))[:, rk, ck, :],
+                    np.asarray(getattr(r2, f)), err_msg=f"{rk},{ck}:{f}")
+            checked += 1
+    assert checked >= 2
+
+
+def test_serve_mesh_and_vmap_paths_agree():
+    """mesh=None (shard_map over a 1-device mesh) == mesh=False (pure vmap)
+    on the same plan, response for response."""
+    cfg = _cfg()
+    a = FleetServe(cfg, 2, 2, traffic=_tc(rounds=10), placement="round_robin",
+                   mesh=False)
+    b = FleetServe(cfg, 2, 2, traffic=_tc(rounds=10), placement="round_robin",
+                   mesh=None)
+    assert b.mesh is not None
+    plan = a.plan()
+    _, ra = a.run(plan)
+    _, rb = b.run(plan)
+    for f in ("ptr", "latency_cyc"):
+        np.testing.assert_array_equal(np.asarray(getattr(ra, f)),
+                                      np.asarray(getattr(rb, f)))
+
+
+def test_serve_least_loaded_spreads_ranks():
+    """least_loaded keeps every rank busy where chunked may concentrate."""
+    tc = _tc(rounds=24, arrival_rate=12.0, num_tenants=12)
+    rep = serve_session(_cfg(), 2, 2, traffic=tc, placement="least_loaded")
+    per_rank = rep["accounting"]["per_rank"]["ops"]
+    assert all(o > 0 for o in per_rank)

@@ -117,6 +117,48 @@ def test_gate_writes_github_step_summary(tmp_path):
     assert "Perf gate FAILED" in text and "| row |" in text
 
 
+def test_gate_new_untracked_rows_pass_with_notice(tmp_path, capsys):
+    """Rows that exist only in the current run (e.g. a freshly added
+    fleet_serve figure) must pass the gate and surface as a 'new' notice,
+    never as failures."""
+    cur = dict(BASE)
+    cur["fleet_serve/sw/placement=round_robin"] = 1.23
+    cur["fleet_serve/sw/placement=least_loaded"] = 1.11
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    out = capsys.readouterr().out
+    assert "fleet_serve/sw/placement=round_robin" in out
+    assert "new" in out and "FAIL" not in out
+
+
+def test_gate_zero_metric_baseline_row_no_divide_by_zero(tmp_path, capsys):
+    """A baseline row whose us_per_call is exactly 0.0 is untracked: the
+    gate must neither divide by zero nor fail when the current value moves
+    (summary/claim rows are free to change)."""
+    base = dict(BASE)
+    base["fig14/zero_row"] = 0.0
+    cur = dict(base)
+    cur["fig14/zero_row"] = 7.5            # any movement is fine
+    b = _write(tmp_path, "base.json", _doc(base))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    out = capsys.readouterr().out
+    assert "ZeroDivisionError" not in out
+    # zero-baseline rows are not in the tracked count
+    assert "4 tracked rows" not in out.split("\n")[0]
+
+
+def test_gate_zero_metric_current_row_is_improvement(tmp_path):
+    """A tracked row dropping TO 0.0 (e.g. a path became free) is a -100%
+    improvement, not an error."""
+    cur = dict(BASE)
+    cur["fig14/sw/size=32"] = 0.0
+    b = _write(tmp_path, "base.json", _doc(BASE))
+    c = _write(tmp_path, "cur.json", _doc(cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+
+
 def test_gate_rejects_wrong_schema(tmp_path):
     doc = _doc(BASE)
     bad = copy.deepcopy(doc)
