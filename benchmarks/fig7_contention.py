@@ -35,7 +35,7 @@ def bench(smoke: bool = False):
     recs.append(emit(
         "fig7/busywait_share_16t", total / 16 / 350e6 * 1e6,
         f"lock_wait={wait / total:.0%};alloc={service / total:.0%} "
-        f"(paper Fig 7b: wait dominates)", busywait_share=wait / total))
+        "(paper Fig 7b: wait dominates)", busywait_share=wait / total))
     return recs
 
 

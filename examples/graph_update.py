@@ -26,7 +26,7 @@ def main():
     if sw["dram_bytes"]:
         red = 1 - hw["dram_bytes"] / sw["dram_bytes"]
         print(f"metadata DRAM traffic reduction HW/SW vs SW: {red:.0%} "
-              f"(paper: 33%)")
+              "(paper: 33%)")
 
 
 if __name__ == "__main__":

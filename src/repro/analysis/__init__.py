@@ -1,0 +1,26 @@
+"""Static analysis for the allocator backends: `pimcheck` + tape lint.
+
+Two pillars (see docs/analysis.md):
+
+* `repro.analysis.pimcheck` — trace every registered backend step with
+  `jax.make_jaxpr` (single / vmapped / sharded tiers) and run the
+  checker passes in `repro.analysis.passes` over the closed jaxpr:
+  donated-state discipline, integer-width safety, index-bound
+  provability, and intra-round write-race detection. CLI:
+  ``python -m repro.analysis.pimcheck --all-kinds --tapes``.
+
+* the ``sanitizer`` backend (`repro.core.sanitizer`, registered in
+  `heap.REGISTRY`) — an ASan-style shadow-heap design point that turns
+  double-free / use-after-free / realloc-after-free into deterministic
+  tagged reports; `sanitizer_report` re-exports its report renderer.
+
+The same-round pointer-race tape rule lives in
+`repro.workloads.trace.trace_lint` (shared with the recorder and the
+replay checker); pimcheck's `--tapes` mode applies it to committed
+tapes.
+"""
+from repro.core.sanitizer import report as sanitizer_report  # noqa: F401
+from .passes import (ALL_PASSES, Finding, PASS_NAMES,  # noqa: F401
+                     SUPPRESSIONS, TracedStep, run_passes)
+from .pimcheck import (check_fixtures, check_kinds, lint_tapes,  # noqa: F401
+                       trace_fixture, trace_kind)

@@ -1,0 +1,78 @@
+"""Seeded-bug mini-backends: one deliberately broken step per pass.
+
+Each fixture serves the (state, AllocRequest) -> (state, out) calling
+convention of a real backend step, small enough to read in one screen,
+and plants exactly the defect its pass exists to catch. `pimcheck
+--fixtures` (and tests/test_analysis.py) asserts every fixture is
+flagged by its `expect_pass` — the checker passes are themselves under
+test, in both directions: real kinds green, planted bugs red.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.heap import AllocRequest
+
+T = 4  # fixture thread count
+
+
+class FixState(NamedTuple):
+    table: jnp.ndarray   # int32[128] — a "size-class table"
+    counts: jnp.ndarray  # int32[64]  — a "freelist occupancy" row
+
+
+def fix_init() -> FixState:
+    return FixState(table=jnp.arange(128, dtype=jnp.int32),
+                    counts=jnp.zeros((64,), jnp.int32))
+
+
+def fix_request() -> AllocRequest:
+    return AllocRequest(op=jnp.ones((T,), jnp.int32),
+                        size=jnp.array([16, 64, 256, 8192], jnp.int32),
+                        ptr=jnp.array([-1, 32, 64, 4096], jnp.int32))
+
+
+# --- int-width: pointer computed through float -----------------------------
+def step_float_leak(st: FixState, req: AllocRequest):
+    """BUG: scales the request size in float32 and converts the result
+    back to an int32 pointer — bits above 2^24 are silently lost."""
+    ptr = (req.size.astype(jnp.float32) * 1.5).astype(jnp.int32)
+    return st, ptr
+
+
+# --- index-bounds: raw request value used as a table index -----------------
+def step_unclamped_index(st: FixState, req: AllocRequest):
+    """BUG: indexes the class table directly with the request size (a
+    PROMISE_IN_BOUNDS gather) — no clip/mod, so size=8192 reads past the
+    128-entry table."""
+    csize = st.table[req.size]
+    return st, csize
+
+
+# --- write-race: per-thread scatter keyed on the request pointer -----------
+def step_aliased_scatter(st: FixState, req: AllocRequest):
+    """BUG: every thread scatters its size into `counts[ptr]`: two
+    threads carrying the same pointer write the same cell in one round,
+    and the survivor is scatter-order-defined."""
+    counts = st.counts.at[req.ptr].set(req.size)
+    return FixState(table=st.table, counts=counts), counts[:T]
+
+
+# --- donation: state buffer re-materialized from a constant ----------------
+def step_dropped_donation(st: FixState, req: AllocRequest):
+    """BUG: returns a freshly zeroed table instead of the (possibly
+    updated) input buffer — the donated input is dropped and a new
+    allocation is made every round."""
+    counts = st.counts + jnp.sum(req.size)
+    return FixState(table=jnp.zeros((128,), jnp.int32), counts=counts), counts[:T]
+
+
+# name -> (step_fn, expected pass that must flag it)
+FIXTURES = {
+    "float_leak": (step_float_leak, "int-width"),
+    "unclamped_index": (step_unclamped_index, "index-bounds"),
+    "aliased_scatter": (step_aliased_scatter, "write-race"),
+    "dropped_donation": (step_dropped_donation, "donation"),
+}

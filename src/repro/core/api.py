@@ -13,7 +13,8 @@ Migration from the pre-protocol Allocator: constructor args and
 `pimMalloc` / `pimFree` / `pimMallocBatch` / `pimFreeBatch` / `gc` /
 `stats` are unchanged; the facade now also exposes `pimRealloc` /
 `pimCalloc`, a `kind=` selector ("sw" default, "hwsw", "strawman",
-"pallas" — the fused-kernel fast path), the
+"pallas" — the fused-kernel fast path, "sanitizer" — the shadow-heap
+misuse detector, see docs/analysis.md), the
 raw `request()` entry point, and `last_info` (per-thread DPU latencies of
 the most recent round). See docs/api.md.
 """
@@ -99,17 +100,16 @@ class Allocator:
     def gc(self) -> None:
         """Merge fully-free thread-cache blocks back into the buddy.
 
-        Works on every pim-style kind (sw/hwsw/pallas share the
-        PimMallocState layout); strawman has no thread caches to merge."""
+        Works on every pim-style kind (sw/hwsw/pallas/sanitizer share the
+        PimMallocState layout in `.alloc` — the sanitizer's shadow map and
+        quarantine describe live allocations, which gc never moves);
+        strawman has no thread caches to merge."""
         if self.cfg.kind == "strawman":
             return
         # gc moves fully-free cached blocks back to the buddy: live bytes
         # are unchanged, so the telemetry counters carry over as-is
-        self.state = SystemState(
-            alloc=pim_malloc.gc(self.cfg.pm, self.state.alloc),
-            cache=self.state.cache,
-            telem=self.state.telem,
-        )
+        self.state = self.state._replace(
+            alloc=pim_malloc.gc(self.cfg.pm, self.state.alloc))
 
     @property
     def stats(self) -> dict:

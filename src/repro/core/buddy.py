@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

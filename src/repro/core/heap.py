@@ -1,7 +1,8 @@
 """The transform-native allocator surface: one request/response protocol.
 
 Every allocator design point in this repo (``strawman``, ``sw``, ``hwsw``,
-``pallas`` — the fused-kernel fast path) serves the same typed protocol:
+``pallas`` — the fused-kernel fast path — and ``sanitizer``, the
+shadow-heap misuse detector) serves the same typed protocol:
 
     state, response = heap.step(cfg, state, request)
 

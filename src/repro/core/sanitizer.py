@@ -1,0 +1,287 @@
+"""ASan-style shadow-heap sanitizer: a wrapper design point over hwsw.
+
+The paper's allocators model heap *misuse* as benign dropped paths: a double
+free or a free through a stale post-realloc pointer is either dropped
+(path 2) or — when block-granularity metadata cannot tell — silently served.
+The ``sanitizer`` kind turns that misuse into **deterministic tagged
+reports** while still serving the full `repro.core.heap` protocol, so it
+enrolls automatically in every KINDS-parametrized test, the differential
+fuzzer, and tape replays:
+
+  shadow map   one int8 cell per 16 B heap granule, tracking the *start
+               granule* of every allocation: LIVE after a successful
+               malloc/calloc/realloc, QUARANTINED after an explicit free,
+               MOVED after a relocating realloc retires the old pointer.
+  poisoning    an op through a non-LIVE start granule never reaches the
+               wrapped allocator; it is tagged (double_free /
+               use_after_free / realloc_after_free / wild) and answered
+               with a deterministic failing response.
+  quarantine   legitimately freed blocks are parked in a FIFO ring instead
+               of being released; the *oldest* entry is only handed to the
+               wrapped allocator's free path when the ring overflows. This
+               delays pointer reuse so cross-round double frees keep
+               hitting poisoned shadow instead of a recycled block.
+
+The wrapped allocator is the hwsw design point (`system._step_pim` with the
+HW buddy-cache metadata path); quarantined bytes therefore stay *live* in
+the heap telemetry and the conservation law
+
+    live_bytes + buddy free bytes + cached frontend bytes == heap_bytes
+
+keeps holding after every round (pinned by tests/test_telemetry.py, which
+auto-parametrizes over this kind). Reports are cumulative int32 counters in
+the state (`SanReports`) plus the per-thread tag vector of the last round;
+`report()` renders them as the documented dict schema (docs/analysis.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from .heap import OP_CALLOC, OP_FREE, OP_MALLOC, OP_REALLOC, AllocRequest, \
+    AllocResponse
+from .pim_malloc import INVALID
+
+# Shadow is tracked at allocation *start granules*: every pointer the
+# allocator hands out is GRANULE-aligned (the smallest size class is 16 B),
+# so one int8 per granule distinguishes live starts from poisoned ones.
+GRANULE = 16
+
+# shadow cell states
+SHADOW_FREE = 0    # no allocation starts here
+SHADOW_LIVE = 1    # start of a live allocation
+SHADOW_QUAR = 2    # start of an explicitly freed block, parked in quarantine
+SHADOW_MOVED = 3   # start retired by a relocating realloc (or evicted misuse)
+
+# per-op misuse tags (state.tags / report schema)
+TAG_NONE = 0
+TAG_DOUBLE_FREE = 1         # free-class op on a QUARANTINED start
+TAG_USE_AFTER_FREE = 2      # free-class op on a MOVED (realloc-retired) start
+TAG_REALLOC_AFTER_FREE = 3  # realloc(size>0) on a QUARANTINED/MOVED start
+TAG_WILD = 4                # op on unmapped / misaligned / out-of-heap ptr
+
+TAG_NAMES = {TAG_NONE: "none", TAG_DOUBLE_FREE: "double_free",
+             TAG_USE_AFTER_FREE: "use_after_free",
+             TAG_REALLOC_AFTER_FREE: "realloc_after_free", TAG_WILD: "wild"}
+
+# quarantine capacity: enough slots that every thread can retire several
+# blocks before the oldest one is released back to the wrapped allocator
+QUARANTINE_FACTOR = 4
+
+
+def quarantine_slots(num_threads: int) -> int:
+    return max(8, QUARANTINE_FACTOR * num_threads)
+
+
+class SanReports(NamedTuple):
+    """Cumulative misuse counters (int32 scalars)."""
+
+    double_free: jnp.ndarray
+    use_after_free: jnp.ndarray
+    realloc_after_free: jnp.ndarray
+    wild_ops: jnp.ndarray
+    quarantined: jnp.ndarray   # legit frees parked in the ring
+    evicted: jnp.ndarray       # ring evictions released to the real free path
+
+
+def _zero_reports() -> SanReports:
+    z = jnp.int32(0)
+    return SanReports(z, z, z, z, z, z)
+
+
+class SanitizerState(NamedTuple):
+    """hwsw state + shadow map + quarantine ring + misuse reports.
+
+    The leading (alloc, cache, telem) triple mirrors `system.SystemState`,
+    so `repro.core.telemetry.snapshot` and the replay reports read this
+    state unchanged.
+    """
+
+    alloc: object            # PimMallocState (the wrapped allocator)
+    cache: object            # BuddyCacheState (hwsw metadata path)
+    telem: object            # system.HeapTelemetry
+    shadow: jnp.ndarray      # int8[heap_bytes // GRANULE]
+    q_ptr: jnp.ndarray       # int32[Q] quarantined pointers (-1 empty)
+    q_head: jnp.ndarray      # int32 index of the oldest entry
+    q_len: jnp.ndarray       # int32 occupancy
+    tags: jnp.ndarray        # int32[T] per-thread tag of the last round
+    reports: SanReports
+
+
+def init_state(cfg, inner_state) -> SanitizerState:
+    """Wrap a freshly initialized hwsw-layout SystemState."""
+    q = quarantine_slots(cfg.num_threads)
+    return SanitizerState(
+        alloc=inner_state.alloc, cache=inner_state.cache,
+        telem=inner_state.telem,
+        shadow=jnp.zeros((cfg.heap_bytes // GRANULE,), jnp.int8),
+        q_ptr=jnp.full((q,), -1, jnp.int32),
+        q_head=jnp.int32(0), q_len=jnp.int32(0),
+        tags=jnp.zeros((cfg.num_threads,), jnp.int32),
+        reports=_zero_reports(),
+    )
+
+
+def _quarantine_pass(q_ptr, q_head, q_len, enq, ptrs):
+    """FIFO ring update for one round (scan over threads, mutex order).
+
+    Each enqueueing thread parks its pointer; when the ring is full the
+    oldest entry is evicted into that same thread's slot of the wrapped
+    request — a thread whose own free is being delayed always has its
+    request slot available to carry the released free.
+    """
+    Q = q_ptr.shape[0]
+
+    def step(carry, x):
+        q_ptr, q_head, q_len = carry
+        enq_t, ptr_t = x
+        # evict BEFORE enqueueing: at capacity the write position wraps
+        # onto q_head, so enqueue-first would overwrite the oldest entry
+        # and then "evict" the brand-new pointer with zero delay
+        evict = enq_t & (q_len >= Q)
+        ev_ptr = q_ptr[q_head]
+        q_head = jnp.where(evict, (q_head + 1) % Q, q_head)
+        q_len = q_len - evict.astype(jnp.int32)
+        wpos = (q_head + q_len) % Q
+        q_ptr = q_ptr.at[wpos].set(jnp.where(enq_t, ptr_t, q_ptr[wpos]))
+        q_len = q_len + enq_t.astype(jnp.int32)
+        return (q_ptr, q_head, q_len), jnp.where(evict, ev_ptr, INVALID)
+
+    (q_ptr, q_head, q_len), evicted = lax.scan(step, (q_ptr, q_head, q_len),
+                                               (enq, ptrs))
+    return q_ptr, q_head, q_len, evicted
+
+
+def step(cfg, st: SanitizerState, req: AllocRequest, inner_step):
+    """One sanitized protocol round.
+
+    ``inner_step`` is the wrapped backend step (`system._step_pim`); the
+    sanitizer classifies every FREE/REALLOC operand against the pre-round
+    shadow, forwards only clean work, and synthesizes deterministic tagged
+    responses for poisoned operands.
+    """
+    from .system import SystemState  # late import: system registers us
+
+    op, size, ptr = req.op, req.size, req.ptr
+    n_gran = st.shadow.shape[0]
+    in_range = (ptr >= 0) & (ptr < cfg.heap_bytes)
+    aligned = in_range & (ptr % GRANULE == 0)
+    g = jnp.clip(jnp.where(in_range, ptr // GRANULE, 0), 0, n_gran - 1)
+    sh = st.shadow[g]
+    live = aligned & (sh == SHADOW_LIVE)
+    quar = aligned & (sh == SHADOW_QUAR)
+    moved_sh = aligned & (sh == SHADOW_MOVED)
+
+    # free-class: explicit FREE, or realloc(p, size<=0) == free(p). NULL
+    # (ptr == -1) stays a benign pass-through no-op, as in every backend.
+    free_class = ((op == OP_FREE) | ((op == OP_REALLOC) & (size <= 0))) \
+        & (ptr >= 0)
+    realloc_live = (op == OP_REALLOC) & (size > 0) & (ptr >= 0)
+
+    tag = jnp.zeros_like(op)
+    tag = jnp.where(free_class & quar, TAG_DOUBLE_FREE, tag)
+    tag = jnp.where(free_class & moved_sh, TAG_USE_AFTER_FREE, tag)
+    tag = jnp.where(free_class & ~live & ~quar & ~moved_sh, TAG_WILD, tag)
+    tag = jnp.where(realloc_live & (quar | moved_sh),
+                    TAG_REALLOC_AFTER_FREE, tag)
+    tag = jnp.where(realloc_live & ~live & ~quar & ~moved_sh, TAG_WILD, tag)
+    tagged = tag > 0
+
+    quar_free = free_class & live          # legit retire -> quarantine
+    passthrough = ~free_class & ~tagged    # NOOP/MALLOC/CALLOC/live REALLOC
+
+    # ---- quarantine ring: park legit frees, maybe release the oldest ------
+    q_ptr, q_head, q_len, evicted = _quarantine_pass(
+        st.q_ptr, st.q_head, st.q_len, quar_free, ptr)
+    evict = evicted >= 0
+
+    # ---- pre-step shadow poisoning ----------------------------------------
+    shadow = st.shadow.at[jnp.where(quar_free, g, n_gran)].set(
+        jnp.int8(SHADOW_QUAR), mode="drop")
+    g_ev = jnp.clip(jnp.where(evict, evicted // GRANULE, 0), 0, n_gran - 1)
+    shadow = shadow.at[jnp.where(evict, g_ev, n_gran)].set(
+        jnp.int8(SHADOW_FREE), mode="drop")
+
+    # ---- wrapped hwsw round on the filtered request -----------------------
+    inner_req = AllocRequest(
+        op=jnp.where(passthrough, op,
+                     jnp.where(evict, OP_FREE, jnp.int32(0))),
+        size=jnp.where(passthrough, size, 0),
+        ptr=jnp.where(passthrough, ptr, jnp.where(evict, evicted, INVALID)),
+    )
+    inner_st = SystemState(alloc=st.alloc, cache=st.cache, telem=st.telem)
+    inner_st, r = inner_step(cfg, inner_st, inner_req)
+
+    # ---- post-step shadow updates from the wrapped responses --------------
+    # a relocating realloc retires the old start; new allocations go LIVE
+    re_moved = passthrough & (op == OP_REALLOC) & r.moved
+    shadow = shadow.at[jnp.where(re_moved, g, n_gran)].set(
+        jnp.int8(SHADOW_MOVED), mode="drop")
+    new_live = passthrough & (r.ptr >= 0) & (
+        (op == OP_MALLOC) | (op == OP_CALLOC) | ((op == OP_REALLOC) & r.moved))
+    g_new = jnp.clip(jnp.where(new_live, r.ptr // GRANULE, 0), 0, n_gran - 1)
+    shadow = shadow.at[jnp.where(new_live, g_new, n_gran)].set(
+        jnp.int8(SHADOW_LIVE), mode="drop")
+
+    # ---- response synthesis ------------------------------------------------
+    dpu = cfg.dpu
+    # quarantined frees are priced like a freelist push plus whatever the
+    # released (evicted) free costs in this thread's wrapped slot; tagged
+    # ops cost one shadow peek
+    lat = jnp.where(passthrough, r.latency_cyc,
+                    jnp.where(quar_free,
+                              dpu.cyc_front_push + r.latency_cyc,
+                              jnp.where(tagged,
+                                        jnp.float32(dpu.cyc_front_hit), 0.0)))
+    path = jnp.where(
+        passthrough, r.path,
+        jnp.where(quar_free, 0,
+                  jnp.where(tagged & free_class, 2,
+                            jnp.where(tagged & realloc_live, 3, INVALID))))
+    resp = AllocResponse(
+        ptr=jnp.where(passthrough, r.ptr, INVALID),
+        ok=jnp.where(passthrough, r.ok, quar_free),
+        path=path.astype(jnp.int32),
+        moved=passthrough & r.moved,
+        latency_cyc=lat,
+        backend_cyc=jnp.where(passthrough | quar_free, r.backend_cyc, 0.0),
+        meta_hits=jnp.where(passthrough | quar_free, r.meta_hits, 0),
+        meta_misses=jnp.where(passthrough | quar_free, r.meta_misses, 0),
+        dram_bytes=jnp.where(passthrough | quar_free, r.dram_bytes, 0),
+    )
+
+    # tagged misuse folds into the wrapped allocator's misuse accounting so
+    # replay reports (stats_dropped_frees) see it like any other backend
+    stats = inner_st.alloc.stats
+    stats = stats._replace(
+        dropped_frees=stats.dropped_frees + jnp.sum(tagged & free_class),
+        fails=stats.fails + jnp.sum(tagged & realloc_live),
+    )
+    rep = st.reports
+    rep = SanReports(
+        double_free=rep.double_free + jnp.sum(tag == TAG_DOUBLE_FREE),
+        use_after_free=rep.use_after_free + jnp.sum(tag == TAG_USE_AFTER_FREE),
+        realloc_after_free=(rep.realloc_after_free
+                            + jnp.sum(tag == TAG_REALLOC_AFTER_FREE)),
+        wild_ops=rep.wild_ops + jnp.sum(tag == TAG_WILD),
+        quarantined=rep.quarantined + jnp.sum(quar_free),
+        evicted=rep.evicted + jnp.sum(evict),
+    )
+    new_st = SanitizerState(
+        alloc=inner_st.alloc._replace(stats=stats), cache=inner_st.cache,
+        telem=inner_st.telem, shadow=shadow, q_ptr=q_ptr, q_head=q_head,
+        q_len=q_len, tags=tag, reports=rep,
+    )
+    return new_st, resp
+
+
+def report(state: SanitizerState) -> dict:
+    """Render the cumulative misuse report (docs/analysis.md schema)."""
+    import numpy as np
+    rep = {k: int(v) for k, v in state.reports._asdict().items()}
+    rep["last_round_tags"] = [TAG_NAMES[int(t)]
+                              for t in np.asarray(state.tags)]
+    rep["quarantine_backlog"] = int(state.q_len)
+    return rep

@@ -11,8 +11,12 @@
              (`repro.kernels.heap_step`): VMEM-resident freelist cache +
              in-kernel buddy traversal + in-kernel LRU buddy cache.
              Bitwise-equal to hwsw in interpret mode; the device fast path.
+  sanitizer: hwsw wrapped in a shadow map + quarantine ring
+             (`repro.core.sanitizer`) — turns double-free /
+             use-after-free / realloc-after-free / wild pointers into
+             deterministic tagged reports. The debugging design point.
 
-All three kinds serve the `repro.core.heap` request/response protocol: this
+All these kinds serve the `repro.core.heap` request/response protocol: this
 module registers one cost-model-instrumented `heap.step` implementation per
 kind. A step services one mixed-op round (per-thread MALLOC / FREE /
 REALLOC / CALLOC / NOOP), persists metadata-cache state across rounds, and
@@ -31,6 +35,7 @@ import dataclasses
 import functools
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -43,7 +48,7 @@ from .heap import (OP_CALLOC, OP_FREE, OP_MALLOC, OP_NOOP, OP_REALLOC,
                    AllocRequest, AllocResponse)
 from .pim_malloc import INVALID, PimMallocConfig
 
-KINDS = ("strawman", "sw", "hwsw", "pallas")
+KINDS = ("strawman", "sw", "hwsw", "pallas", "sanitizer")
 
 
 # --------------------------------------------------------------------------
@@ -187,18 +192,18 @@ class SystemConfig:
 
     @property
     def access_fn(self):
-        if self.kind in ("hwsw", "pallas"):
+        if self.kind in ("hwsw", "pallas", "sanitizer"):
             return functools.partial(buddy_cache_access, self.bc)
         return functools.partial(sw_buffer_access, self.sw_buf)
 
     def cache_init(self):
-        if self.kind in ("hwsw", "pallas"):
+        if self.kind in ("hwsw", "pallas", "sanitizer"):
             return buddy_cache_init(self.bc)
         return sw_buffer_init(self.sw_buf)
 
     @property
     def dma_bytes_per_miss(self) -> int:
-        if self.kind in ("hwsw", "pallas"):
+        if self.kind in ("hwsw", "pallas", "sanitizer"):
             return buddy_cache.WORD_BYTES
         return self.sw_buf.line_bytes
 
@@ -249,13 +254,17 @@ class RoundInfo(NamedTuple):
     backend_cyc: jnp.ndarray   # float32[T] service time excl. queuing
 
 
-def system_init(cfg: SystemConfig, prepopulate: bool = True) -> SystemState:
+def system_init(cfg: SystemConfig, prepopulate: bool = True):
     if cfg.kind == "strawman":
         alloc = strawman_init(cfg.straw)
     else:
         alloc = pim_malloc.init(cfg.pm, prepopulate=prepopulate)
-    return SystemState(alloc=alloc, cache=cfg.cache_init(),
+    base = SystemState(alloc=alloc, cache=cfg.cache_init(),
                        telem=telemetry_init())
+    if cfg.kind == "sanitizer":
+        from . import sanitizer
+        return sanitizer.init_state(cfg, base)
+    return base
 
 
 def _cache_pass(cfg: SystemConfig, cache_st, backend_pos, traces):
@@ -449,6 +458,31 @@ def _step_pim(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         meta_fn=lambda s, p, z: pim_malloc.realloc_meta(cfg.pm, s, p, z),
         free_path_fn=lambda ev: ev.path,
     )
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _sanitizer_step_compiled(cfg: SystemConfig, st, req: AllocRequest):
+    from . import sanitizer
+
+    return sanitizer.step(cfg, st, req, _step_pim)
+
+
+@heap.register("sanitizer")
+def _step_sanitizer(cfg: SystemConfig, st, req: AllocRequest):
+    """ASan-style shadow-heap wrapper over the hwsw design point.
+
+    Classifies every FREE/REALLOC operand against a 16 B-granule shadow
+    map, quarantines legitimate frees in a FIFO ring, and forwards only
+    clean work to `_step_pim`; poisoned operands are answered with
+    deterministic tagged reports. See `repro.core.sanitizer`.
+
+    The step is jit-compiled as a single unit (cfg static): the shadow
+    classification + forwarded hwsw round otherwise execute as dozens of
+    separately compiled primitives per eager call, which both slows the
+    KINDS-parametrized suites down and bloats XLA's per-process
+    compilation footprint.
+    """
+    return _sanitizer_step_compiled(cfg, st, req)
 
 
 @heap.register("pallas")

@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core import buddy
 from repro.core.buddy import BuddyConfig, BuddyState

@@ -104,7 +104,8 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
         dp *= mesh.shape[a]
 
     t0 = time.time()
-    nm_ = lambda spec: sharding.named(mesh, spec)
+    def nm_(spec):
+        return sharding.named(mesh, spec)
     with activate_mesh(mesh):
         if shape.kind == "train":
             opt_cfg = AdamWConfig(moment_dtype=cfg.opt_moment_dtype)

@@ -26,7 +26,6 @@ single-layer probes in tests/test_dryrun_small.py.
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 

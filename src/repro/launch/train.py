@@ -12,10 +12,8 @@ watchdog, and checkpoint/restart recovery (optionally chaos-tested via
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
@@ -24,7 +22,6 @@ from repro.data.pipeline import StreamConfig, TokenStream, shard_batch
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_train_step
 from repro.models import registry
-from repro.models.config import ShapeConfig
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig
 from repro.runtime import fault

@@ -188,7 +188,6 @@ def prefill(cfg: ArchConfig, params, batch, cache):
 
 def decode(cfg: ArchConfig, params, cache, batch):
     tokens = batch["tokens"]
-    B = tokens.shape[0]
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     pos = cache["seq_lens"]
     x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]

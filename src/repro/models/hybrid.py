@@ -270,7 +270,6 @@ def _attn_mixer_decode(cfg, x, lp, win_k, win_v, pos):
 
 def decode(cfg: ArchConfig, params, cache, batch):
     tokens = batch["tokens"]
-    B = tokens.shape[0]
     pos = cache["seq_lens"]
     x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]
     G, R = _group_counts(cfg)

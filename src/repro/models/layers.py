@@ -6,7 +6,6 @@ Matmuls run in the config dtype with fp32 accumulation.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -154,7 +154,6 @@ def prefill(cfg: ArchConfig, params, batch, cache):
 def decode(cfg: ArchConfig, params, cache, batch):
     """One decode step: tokens [B, 1] -> (cache, logits [B, V])."""
     tokens = batch["tokens"]
-    B = tokens.shape[0]
     H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     pos = cache["seq_lens"]  # [B] position of the new token
     x = params["embed"][tokens[:, 0]].astype(cfg.dtype)[:, None, :]  # [B,1,D]

@@ -8,7 +8,6 @@ bidirectional attention over the image+prompt prefix).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kvcache import paged

@@ -48,7 +48,8 @@ def schedule(cfg: AdamWConfig, step):
 
 def init(cfg: AdamWConfig, params) -> AdamWState:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return AdamWState(count=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

@@ -127,7 +127,6 @@ class HashTableWorkload:
 
     def _maybe_grow(self):
         """One realloc round growing every table past the load factor."""
-        T = self.cfg.num_threads
         need = [tab.live / tab.capacity > self.cfg.max_load
                 for tab in self.tables]
         if not any(need):

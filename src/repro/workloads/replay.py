@@ -40,7 +40,7 @@ from jax import lax
 
 from repro.core import heap, system as sysm, telemetry
 from repro.core.heap import AllocRequest
-from repro.workloads.trace import Trace, response_digest
+from repro.workloads.trace import Trace, response_digest, trace_lint
 
 PARITY_PAIRS = (("pallas", "hwsw", "full"), ("sw", "hwsw", "semantic"))
 
@@ -144,7 +144,7 @@ def check_trace(trace: Trace, kinds=None, results=None) -> list:
     """Verify the cross-backend contract; returns error strings.
 
     ``results`` reuses a prior `replay_all_kinds` output (else replays)."""
-    errs = []
+    errs = list(trace_lint(trace))
     if results is None:
         results = replay_all_kinds(trace, kinds)
     for kind, (_, rep) in results.items():

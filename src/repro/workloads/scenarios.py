@@ -26,7 +26,6 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import heap
 from repro.workloads.hashtable import HashTableConfig, HashTableWorkload
 from repro.workloads.trace import RecordingAllocator, Trace
 

@@ -136,6 +136,71 @@ class Trace:
             return cls.from_json(json.load(f))
 
 
+def trace_lint(trace: Trace) -> list:
+    """Machine-checkable well-formedness rules for a tape.
+
+    Exports the differential fuzzer's modeled-UB exclusions (previously
+    prose inside `tests/test_differential_fuzz.py`) as a reusable
+    predicate, so committed tapes can never encode the pattern silently.
+    Returns a list of human-readable findings (empty == clean).
+
+    Rules:
+      ops        every op code is one of the five protocol ops.
+      refs       a ``ptr_ref`` names a slot of a *strictly earlier* round
+                 and lies inside the tape.
+      race-A     within one round, two threads must not operate on the
+                 same pointer chain (duplicate ``ptr_ref``): the protocol
+                 round order (malloc phase, then free phase, one metadata
+                 pass) makes the outcome of racing same-chain ops
+                 round-order-defined UB across backends.
+      race-B     a *suspect* free-class op (raw pointer operand with no
+                 producing slot: garbage or dangling) must not share a
+                 round with a metadata-creating op (MALLOC / CALLOC /
+                 growing REALLOC) — the create can recycle the very block
+                 the suspect free names, which is the same-round
+                 pointer-race class the fuzzer excludes by construction.
+    """
+    errs = []
+    op, size, ref = trace.op, trace.size, trace.ptr_ref
+    raw = trace.ptr_raw
+    R, T = op.shape
+    known = (heap.OP_NOOP, heap.OP_MALLOC, heap.OP_FREE, heap.OP_REALLOC,
+             heap.OP_CALLOC)
+    bad_op = ~np.isin(op, known)
+    for r, t in zip(*np.nonzero(bad_op)):
+        errs.append(f"[lint:ops] round {r} thread {t}: unknown op code "
+                    f"{int(op[r, t])}")
+
+    has_ref = ref >= 0
+    this_round_base = (np.arange(R) * T)[:, None]
+    bad_ref = has_ref & ((ref >= this_round_base) | (ref >= R * T))
+    for r, t in zip(*np.nonzero(bad_ref)):
+        errs.append(f"[lint:refs] round {r} thread {t}: ptr_ref "
+                    f"{int(ref[r, t])} does not name an earlier round's slot")
+
+    creator = (op == heap.OP_MALLOC) | (op == heap.OP_CALLOC) | \
+        ((op == heap.OP_REALLOC) & (size > 0))
+    free_class = (op == heap.OP_FREE) | ((op == heap.OP_REALLOC) &
+                                         (size <= 0))
+    suspect = free_class & ~has_ref & (raw >= 0)
+    for r in range(R):
+        refs_r = ref[r][has_ref[r]]
+        uniq, counts = np.unique(refs_r, return_counts=True)
+        for s in uniq[counts > 1]:
+            ts = [int(t) for t in np.nonzero(ref[r] == s)[0]]
+            errs.append(f"[lint:race-A] round {r}: threads {ts} both operate "
+                        f"on the chain produced at slot {int(s)} — "
+                        "same-round pointer race (modeled UB)")
+        if suspect[r].any() and creator[r].any():
+            ts = [int(t) for t in np.nonzero(suspect[r])[0]]
+            cs = [int(t) for t in np.nonzero(creator[r])[0]]
+            errs.append(f"[lint:race-B] round {r}: suspect free-class ops on "
+                        f"threads {ts} (raw pointer, no producing slot) race "
+                        f"metadata-creating ops on threads {cs} — "
+                        "same-round pointer race (modeled UB)")
+    return errs
+
+
 class RecordingAllocator(api.Allocator):
     """An `api.Allocator` that captures every protocol round onto a tape.
 
@@ -191,14 +256,24 @@ class RecordingAllocator(api.Allocator):
         self._rounds.append((op, size, ptr_ref, ptr))
         return resp
 
-    def finish(self, name: str, description: str = "", meta: dict = None
-               ) -> Trace:
+    def finish(self, name: str, description: str = "", meta: dict = None,
+               lint: bool = True) -> Trace:
         """Freeze the recorded rounds into a Trace (no expect digests yet —
-        `repro.workloads.replay.attach_expectations` fills those)."""
+        `repro.workloads.replay.attach_expectations` fills those).
+
+        Runs `trace_lint` by default so a recorder can never hand out a
+        tape encoding the modeled-UB same-round race; pass ``lint=False``
+        only to capture a deliberately broken tape for testing."""
         op, size, ptr_ref, ptr_raw = (np.stack(x) for x in
                                       zip(*self._rounds))
-        return Trace(name=name, heap_bytes=self.cfg.heap_bytes,
-                     num_threads=self.cfg.num_threads,
-                     recorded_kind=self.cfg.kind, description=description,
-                     op=op, size=size, ptr_ref=ptr_ref, ptr_raw=ptr_raw,
-                     meta=meta or {})
+        trace = Trace(name=name, heap_bytes=self.cfg.heap_bytes,
+                      num_threads=self.cfg.num_threads,
+                      recorded_kind=self.cfg.kind, description=description,
+                      op=op, size=size, ptr_ref=ptr_ref, ptr_raw=ptr_raw,
+                      meta=meta or {})
+        if lint:
+            errs = trace_lint(trace)
+            if errs:
+                raise ValueError("recorded tape fails trace_lint:\n  "
+                                 + "\n  ".join(errs))
+        return trace

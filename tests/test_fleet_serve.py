@@ -9,7 +9,6 @@ placement, and per-core trace export that replays bitwise.
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
 
 from repro.core import heap, system as sysm
 from repro.launch import fleet

@@ -1,9 +1,7 @@
 """Integration tests: dynamic graph workload + paged KV cache + PagePool."""
 import numpy as np
 
-import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.graphupd.workload import (DynamicGraph, GraphConfig, compare_all,
                                      synth_edges)

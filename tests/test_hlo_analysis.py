@@ -4,7 +4,6 @@ Validated against XLA's own cost_analysis on UNROLLED programs (where
 cost_analysis is exact), and against hand-computed trip scaling."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax import lax
 

@@ -84,7 +84,6 @@ def test_backend_serialization_order(ops):
 def test_gc_merges_full_blocks(ops):
     malloc, free, gc = ops
     st_ = pm.init(CFG)
-    free0 = int(jnp.sum(st_.buddy.longest[1] == 0))
     # exhaust + free the 1024-class, then gc twice
     st_, p1, _ = malloc(st_, jnp.full((4,), 1024, jnp.int32))
     st_, p2, _ = malloc(st_, jnp.full((4,), 1024, jnp.int32))

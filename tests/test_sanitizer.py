@@ -1,0 +1,220 @@
+"""The `sanitizer` backend: shadow map, quarantine, deterministic tags.
+
+Contract (ISSUE 6 acceptance): the sanitizer kind serves the full heap
+protocol (it auto-enrolls in every KINDS-parametrized suite) and turns
+heap misuse — double free, use-after-free through a stale pre-realloc
+pointer, realloc-after-free, wild pointers — from modeled-benign dropped
+paths into deterministic tagged reports, while the conservation law keeps
+holding because quarantined blocks stay live in the wrapped hwsw heap.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heap, sanitizer, system as sysm, telemetry
+from test_differential_fuzz import SMOKE_SEEDS, fuzz_trace
+
+T = 4
+HEAP = 1 << 18
+
+
+def _cfg(**kw):
+    return sysm.SystemConfig(kind="sanitizer", heap_bytes=HEAP,
+                             num_threads=T, **kw)
+
+
+def _malloc(cfg, st, sizes):
+    return heap.step(cfg, st, heap.malloc_request(
+        jnp.array(sizes, jnp.int32)))
+
+
+def _free(cfg, st, ptrs):
+    return heap.step(cfg, st, heap.free_request(jnp.array(ptrs, jnp.int32)))
+
+
+def _realloc(cfg, st, ptrs, sizes):
+    return heap.step(cfg, st, heap.realloc_request(
+        jnp.array(ptrs, jnp.int32), jnp.array(sizes, jnp.int32)))
+
+
+# ------------------------------------------------------------ enrollment
+def test_sanitizer_is_registered():
+    assert "sanitizer" in heap.kinds()
+    assert "sanitizer" in sysm.KINDS
+
+
+def test_state_mirrors_system_state_layout():
+    """telemetry.snapshot and the replay reports read (alloc, cache,
+    telem) straight off the state — the sanitizer state must lead with
+    the same triple."""
+    cfg = _cfg()
+    st = heap.init(cfg)
+    assert isinstance(st, sanitizer.SanitizerState)
+    snap = telemetry.snapshot(cfg, st)
+    assert snap["conservation_residual"] == 0
+    assert st.shadow.shape == (HEAP // sanitizer.GRANULE,)
+    assert st.q_ptr.shape == (sanitizer.quarantine_slots(T),)
+
+
+# ------------------------------------------------------- the three tags
+def test_double_free_is_tagged_deterministically():
+    cfg = _cfg()
+    st = heap.init(cfg)
+    st, r = _malloc(cfg, st, [32, 256, 2048, 64])
+    st, rf = _free(cfg, st, r.ptr)
+    assert bool(rf.ok.all()) and (np.asarray(rf.path) == 0).all()
+    st, rd = _free(cfg, st, r.ptr)          # every thread frees again
+    assert not bool(rd.ok.any())
+    assert (np.asarray(rd.path) == 2).all()  # reported like a dropped free
+    assert (np.asarray(rd.ptr) == -1).all()
+    assert (np.asarray(st.tags) == sanitizer.TAG_DOUBLE_FREE).all()
+    assert int(st.reports.double_free) == T
+    assert int(st.alloc.stats.dropped_frees) == T  # folds into stats
+    # deterministic: a fresh identical run produces identical everything
+    st2 = heap.init(cfg)
+    st2, r2 = _malloc(cfg, st2, [32, 256, 2048, 64])
+    st2, _ = _free(cfg, st2, r2.ptr)
+    st2, rd2 = _free(cfg, st2, r2.ptr)
+    np.testing.assert_array_equal(np.asarray(rd.latency_cyc),
+                                  np.asarray(rd2.latency_cyc))
+    np.testing.assert_array_equal(np.asarray(st.tags), np.asarray(st2.tags))
+
+
+def test_use_after_free_via_stale_realloc_pointer():
+    cfg = _cfg()
+    st = heap.init(cfg)
+    st, r = _malloc(cfg, st, [64, 0, 0, 0])
+    p0 = int(r.ptr[0])
+    st, rr = _realloc(cfg, st, [p0, -1, -1, -1], [8192, 0, 0, 0])
+    assert bool(rr.moved[0]) and int(rr.ptr[0]) != p0
+    st, rf = _free(cfg, st, [p0, -1, -1, -1])   # stale pre-realloc pointer
+    assert not bool(rf.ok[0]) and int(rf.path[0]) == 2
+    assert int(st.tags[0]) == sanitizer.TAG_USE_AFTER_FREE
+    assert int(st.reports.use_after_free) == 1
+    # the relocated block is still perfectly freeable
+    st, rf2 = _free(cfg, st, [int(rr.ptr[0]), -1, -1, -1])
+    assert bool(rf2.ok[0])
+
+
+def test_realloc_after_free_is_tagged():
+    cfg = _cfg()
+    st = heap.init(cfg)
+    st, r = _malloc(cfg, st, [64, 128, 0, 0])
+    st, _ = _free(cfg, st, [int(r.ptr[0]), -1, -1, -1])
+    st, rr = _realloc(cfg, st, [int(r.ptr[0]), -1, -1, -1], [128, 0, 0, 0])
+    assert not bool(rr.ok[0]) and int(rr.path[0]) == 3  # fails like realloc
+    assert int(rr.ptr[0]) == -1
+    assert int(st.tags[0]) == sanitizer.TAG_REALLOC_AFTER_FREE
+    assert int(st.reports.realloc_after_free) == 1
+    assert int(st.alloc.stats.fails) >= 1
+    # the untouched thread-1 block is unaffected
+    st, rf = _free(cfg, st, [-1, int(r.ptr[1]), -1, -1])
+    assert bool(rf.ok[1])
+
+
+def test_wild_and_misaligned_pointers_are_tagged():
+    cfg = _cfg()
+    st = heap.init(cfg)
+    st, r = _malloc(cfg, st, [64, 0, 0, 0])
+    p0 = int(r.ptr[0])
+    # out-of-range, unmapped-in-range, interior (misaligned), NULL
+    st, rf = _free(cfg, st, [HEAP + 8, 131072 + 16, p0 + 4, -1])
+    assert (np.asarray(rf.path)[:3] == 2).all()
+    assert int(rf.path[3]) == -1                       # NULL stays benign
+    assert (np.asarray(st.tags)[:3] == sanitizer.TAG_WILD).all()
+    assert int(st.reports.wild_ops) == 3
+    assert int(st.alloc.stats.dropped_frees) == 3
+
+
+# ------------------------------------------------------------ quarantine
+def test_quarantine_delays_pointer_reuse():
+    """hwsw recycles a freed small block LIFO on the very next malloc;
+    the sanitizer parks it in the quarantine ring instead."""
+    cfg = _cfg()
+    hw = sysm.SystemConfig(kind="hwsw", heap_bytes=HEAP, num_threads=T)
+    st, sh = heap.init(cfg), heap.init(hw)
+    st, r = _malloc(cfg, st, [64, 0, 0, 0])
+    sh, rh = heap.step(hw, sh, heap.malloc_request(
+        jnp.array([64, 0, 0, 0], jnp.int32)))
+    assert int(r.ptr[0]) == int(rh.ptr[0])  # same inner allocator
+    st, _ = _free(cfg, st, [int(r.ptr[0]), -1, -1, -1])
+    sh, _ = heap.step(hw, sh, heap.free_request(
+        jnp.array([int(rh.ptr[0]), -1, -1, -1], jnp.int32)))
+    st, r2 = _malloc(cfg, st, [64, 0, 0, 0])
+    sh, rh2 = heap.step(hw, sh, heap.malloc_request(
+        jnp.array([64, 0, 0, 0], jnp.int32)))
+    assert int(rh2.ptr[0]) == int(rh.ptr[0])   # hwsw: immediate LIFO reuse
+    assert int(r2.ptr[0]) != int(r.ptr[0])     # sanitizer: still parked
+    assert int(st.q_len) == 1
+    assert int(st.reports.quarantined) == 1
+
+
+def test_quarantine_overflow_evicts_fifo_and_conserves():
+    """Past capacity the OLDEST entry is released to the real free path;
+    conservation holds throughout, and a released granule returns to
+    unmapped shadow (a later free of it is wild, not double-free)."""
+    cfg = _cfg()
+    st = heap.init(cfg)
+    Q = sanitizer.quarantine_slots(T)
+    rounds = Q // T + 2
+    ptrs = []
+    for _ in range(rounds):
+        st, r = _malloc(cfg, st, [2048] * T)
+        assert (np.asarray(r.ptr) >= 0).all()
+        ptrs.append(np.asarray(r.ptr).copy())
+    first = int(ptrs[0][0])
+    for p in ptrs:
+        st, rf = _free(cfg, st, p)
+        assert bool(rf.ok.all())
+        snap = telemetry.snapshot(cfg, st)
+        assert snap["conservation_residual"] == 0
+    assert int(st.reports.quarantined) == rounds * T
+    assert int(st.reports.evicted) == rounds * T - Q
+    assert int(st.q_len) == Q
+    # the first-freed pointer was evicted (FIFO): shadow is unmapped again
+    assert int(st.shadow[first // sanitizer.GRANULE]) == sanitizer.SHADOW_FREE
+    st, rf = _free(cfg, st, [first, -1, -1, -1])
+    assert int(st.tags[0]) == sanitizer.TAG_WILD  # released, not double-free
+
+
+# ------------------------------------------- fuzzer misuse-stream contract
+@pytest.mark.parametrize("seed", SMOKE_SEEDS)
+def test_fuzz_misuse_streams_replay_deterministically(seed):
+    from repro.workloads.replay import replay
+
+    trace = fuzz_trace(seed)
+    _, s1, rep1 = replay(trace, "sanitizer")
+    _, s2, rep2 = replay(trace, "sanitizer")
+    assert rep1["digest_full"] == rep2["digest_full"]
+    assert sanitizer.report(s1) == sanitizer.report(s2)
+    assert rep1["telemetry"]["conservation_residual"] == 0
+
+
+def test_fuzz_misuse_streams_are_tagged():
+    """Across the CI smoke seeds the sanitizer must tag all misuse
+    classes the fuzzer plants: cross-round double frees (incl.
+    realloc(dead, 0)), stale pre-realloc frees, and garbage pointers."""
+    from repro.workloads.replay import replay
+
+    totals = {"double_free": 0, "use_after_free": 0, "wild_ops": 0}
+    for seed in SMOKE_SEEDS:
+        _, state, _ = replay(fuzz_trace(seed), "sanitizer")
+        rep = sanitizer.report(state)
+        for k in totals:
+            totals[k] += rep[k]
+    assert totals["double_free"] > 0, totals
+    assert totals["use_after_free"] > 0, totals
+    assert totals["wild_ops"] > 0, totals
+
+
+def test_report_schema():
+    cfg = _cfg()
+    st = heap.init(cfg)
+    st, r = _malloc(cfg, st, [64, 0, 0, 0])
+    st, _ = _free(cfg, st, r.ptr)
+    rep = sanitizer.report(st)
+    assert set(rep) == {"double_free", "use_after_free",
+                        "realloc_after_free", "wild_ops", "quarantined",
+                        "evicted", "last_round_tags", "quarantine_backlog"}
+    assert rep["last_round_tags"] == ["none"] * T
+    assert rep["quarantine_backlog"] == 1

@@ -1,7 +1,5 @@
 """Substrate tests: optimizer, compression, data pipeline, checkpointing,
 fault-tolerant runtime, sharding rules."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -166,7 +164,6 @@ def test_param_specs_divisibility():
     from repro.models import registry
     from repro.parallel import sharding
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
 
     # qwen2: 60 experts not divisible by model axis in production; verify the
     # rule logic directly against a fake 16-way mesh via _maybe

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import heap, system as sysm
+from repro.core import heap
 from repro.workloads.hashtable import HashTableConfig, HashTableWorkload
 from repro.workloads.replay import (check_trace, replay, replay_all_kinds)
 from repro.workloads.trace import RecordingAllocator, Trace
