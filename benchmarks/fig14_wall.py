@@ -1,0 +1,61 @@
+"""Wall-clock lane for the fig14 mix: *measured* kernel-path round time.
+
+Every other figure reports modeled `us_per_call` from the cost model; this
+one times the compiled `pallas` round loop itself (warmup + repeated
+`block_until_ready` execution, median) for the fig14 size/thread cells,
+twice — batched same-class refill on, and forced off
+(``kernel_batch_refill=False``, the pre-batching serial walk) — and emits
+the mix speedup as its own row. Both settings are bitwise-identical in
+responses and state, so this lane measures execution speed only.
+
+Rows land under ``fig14_wall/*`` with ``lane="wall"`` and an ``env_key``
+stamp; `perf_gate.py` diffs them only against same-env baselines and with
+the looser ``--fail-over-wall`` threshold (see benchmarks/README.md).
+"""
+from __future__ import annotations
+
+from .common import emit, micro_alloc_wall, wall_env_key
+
+# the fig14 mix's pallas column: all-hit rounds (32 B), periodic
+# whole-round refill bursts (256 B drains the prepopulated freelists every
+# 16 rounds), and per-round block-granularity bypass (4096 B)
+CELLS = ((32, 1), (32, 16), (256, 16), (4096, 16))
+
+
+def bench(smoke: bool = False):
+    rounds = 24 if smoke else 96
+    repeats = 3 if smoke else 5
+    env = wall_env_key()
+    recs = []
+    mix_round_us = {}
+    for batch, tag in ((True, "pallas"), (False, "pallas_nobatch")):
+        total = 0.0
+        for size, nt in CELLS:
+            r = micro_alloc_wall("pallas", size, nt, rounds=rounds,
+                                 repeats=repeats, batch_refill=batch)
+            total += r["wall_us_per_round"]
+            recs.append(emit(
+                f"fig14_wall/{tag}/size={size}/threads={nt}",
+                r["wall_us_per_call"],
+                f"round={r['wall_us_per_round']:.0f}us "
+                f"modeled={r['modeled_us_per_call']:.2f}us",
+                backend="pallas", lane="wall", env_key=env,
+                batch_refill=int(batch),
+                wall_us_per_round=r["wall_us_per_round"],
+                modeled_us_per_call=r["modeled_us_per_call"],
+                rounds_per_sec=r["rounds_per_sec"],
+                rounds=r["rounds"], ops=r["ops"]))
+        mix_round_us[tag] = total
+    speedup = mix_round_us["pallas_nobatch"] / max(mix_round_us["pallas"],
+                                                   1e-9)
+    recs.append(emit(
+        "fig14_wall/kernel_batch_speedup",
+        mix_round_us["pallas"] / len(CELLS),
+        f"{speedup:.2f}x round throughput vs pre-batching serial walk "
+        f"(mix {mix_round_us['pallas_nobatch']:.0f} -> "
+        f"{mix_round_us['pallas']:.0f} us)",
+        backend="pallas", lane="wall", env_key=env,
+        speedup_vs_serial=speedup,
+        mix_wall_us_batched=mix_round_us["pallas"],
+        mix_wall_us_serial=mix_round_us["pallas_nobatch"]))
+    return recs

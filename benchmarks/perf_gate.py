@@ -3,24 +3,34 @@ baseline (`BENCH_BASELINE.json`, schema ``pim-malloc-bench/v1``).
 
     PYTHONPATH=src python benchmarks/perf_gate.py bench_smoke.json \
         [--baseline BENCH_BASELINE.json] [--fail-over 0.20] [--warn-over 0.05]
+        [--fail-over-wall 1.50] [--warn-over-wall 0.50] [--lane all]
 
-Every baseline record with a positive ``us_per_call`` is a *tracked row*
-(the modeled latencies are deterministic functions of the cost model, so
-they are stable across runner machines; wall-clock metrics such as
-``wall_us_per_step`` are never gated). The gate
+Every baseline record with a positive ``us_per_call`` is a *tracked row*,
+in one of two families:
 
-  * FAILS (exit 1) when any tracked row regresses by more than
-    ``--fail-over`` (default +20% us_per_call),
-  * FAILS when a tracked row disappears from the current run — a deleted
-    or renamed benchmark must refresh the committed baseline explicitly,
-    never fall out of the trajectory silently,
-  * WARNS on regressions above ``--warn-over`` (default +5%),
-  * reports improvements and newly appearing rows informationally,
+  * **modeled** rows (the default): deterministic functions of the cost
+    model, stable across runner machines. FAIL (exit 1) past
+    ``--fail-over`` (default +20%), and FAIL when a tracked row disappears
+    from the current run — a deleted or renamed benchmark must refresh the
+    committed baseline explicitly, never fall out of the trajectory
+    silently. WARN above ``--warn-over`` (default +5%).
+  * **wall** rows (``lane == "wall"``, e.g. ``fig14_wall/*``): measured
+    execution time. Machine-dependent, so the thresholds are generous
+    (``--fail-over-wall``, default +150%; warn +50%), rows are only
+    compared when baseline and current carry the same ``env_key`` (runner
+    class — CPU-interpret and compiled-device numbers never cross-gate;
+    mismatches report as ``env-skip``), and a wall row *missing* from the
+    current run is a warning, not a failure (a lane that only ran a subset
+    must not read as a regression).
 
-and writes the delta table as GitHub-flavored markdown to
-``$GITHUB_STEP_SUMMARY`` when that env var is set (always to stdout).
-Refreshing the baseline after an intentional perf change is documented in
-benchmarks/README.md ("Perf gate & baseline refresh").
+``--lane modeled|wall`` restricts the gate to one family (CI runs the
+modeled gate on the full smoke artifact and the wall gate on the
+bench-wall artifact separately); default ``all`` gates both. Improvements
+and newly appearing rows report informationally, and the delta table is
+written as GitHub-flavored markdown to ``$GITHUB_STEP_SUMMARY`` when that
+env var is set (always to stdout). Refreshing the baseline after an
+intentional perf change is documented in benchmarks/README.md ("Perf gate
+& baseline refresh").
 """
 from __future__ import annotations
 
@@ -30,6 +40,8 @@ import os
 import sys
 
 SCHEMA = "pim-malloc-bench/v1"
+WALL_FAIL_OVER = 1.50
+WALL_WARN_OVER = 0.50
 
 
 def load_rows(path: str) -> dict:
@@ -55,35 +67,64 @@ def load_rows_and_errors(path: str):
     return rows, errors
 
 
-def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float):
+def row_lane(rec: dict) -> str:
+    """Row family: ``wall`` for measured-execution rows, else ``modeled``."""
+    return "wall" if rec.get("lane") == "wall" else "modeled"
+
+
+def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float,
+              fail_over_wall: float = None, warn_over_wall: float = None,
+              lane: str = "all"):
     """Compare tracked rows; returns (entries, failures, warnings).
 
     entries: (name, base_us, cur_us, delta, verdict) sorted worst-first;
-    delta is None for missing/new rows.
+    delta is None for missing/new/env-skipped rows.
     """
+    if fail_over_wall is None:
+        fail_over_wall = WALL_FAIL_OVER
+    if warn_over_wall is None:
+        warn_over_wall = WALL_WARN_OVER
     entries, failures, warnings = [], [], []
-    tracked = {n: r for n, r in base.items() if r.get("us_per_call", 0) > 0}
+    tracked = {n: r for n, r in base.items()
+               if r.get("us_per_call", 0) > 0
+               and lane in ("all", row_lane(r))}
     for name, brec in sorted(tracked.items()):
+        wall = row_lane(brec) == "wall"
         b = float(brec["us_per_call"])
         crec = cur.get(name)
         if crec is None:
-            failures.append(f"tracked row disappeared: {name} "
-                            "(refresh BENCH_BASELINE.json if intentional)")
-            entries.append((name, b, None, None, "MISSING"))
+            if wall:
+                warnings.append(
+                    f"wall row missing from current run: {name} "
+                    "(wall lane warns, never fails, on absence)")
+                entries.append((name, b, None, None, "no-wall"))
+            else:
+                failures.append(f"tracked row disappeared: {name} "
+                                "(refresh BENCH_BASELINE.json if intentional)")
+                entries.append((name, b, None, None, "MISSING"))
             continue
         c = float(crec["us_per_call"])
+        if wall and str(brec.get("env_key")) != str(crec.get("env_key")):
+            # different runner class: wall numbers are not comparable
+            entries.append((name, b, c, None, "env-skip"))
+            continue
         delta = c / b - 1.0
-        if delta > fail_over:
+        fo, wo = ((fail_over_wall, warn_over_wall) if wall
+                  else (fail_over, warn_over))
+        if delta > fo:
             verdict = "FAIL"
-            failures.append(f"{name}: {b:.4f} -> {c:.4f} us "
-                            f"(+{delta * 100:.1f}% > {fail_over * 100:.0f}%)")
-        elif delta > warn_over:
+            failures.append(
+                f"{name}: {b:.4f} -> {c:.4f} us (+{delta * 100:.1f}% > "
+                f"{fo * 100:.0f}%{' wall' if wall else ''})")
+        elif delta > wo:
             verdict = "warn"
             warnings.append(f"{name}: +{delta * 100:.1f}%")
         else:
             verdict = "ok"
         entries.append((name, b, c, delta, verdict))
     for name in sorted(set(cur) - set(base)):
+        if lane not in ("all", row_lane(cur[name])):
+            continue
         entries.append((name, None,
                         float(cur[name].get("us_per_call", 0.0)), None, "new"))
     entries.sort(key=lambda e: (-(e[3] if e[3] is not None else -1e9), e[0]))
@@ -97,8 +138,8 @@ def markdown_table(entries, limit: int = 40) -> str:
         bs = f"{b:.4f}" if b is not None else "—"
         cs = f"{c:.4f}" if c is not None else "—"
         ds = f"{d * 100:+.1f}%" if d is not None else "—"
-        mark = {"FAIL": "❌", "warn": "⚠️", "MISSING": "❌",
-                "new": "🆕", "ok": ""}.get(v, "")
+        mark = {"FAIL": "❌", "warn": "⚠️", "MISSING": "❌", "no-wall": "⚠️",
+                "env-skip": "ℹ️", "new": "🆕", "ok": ""}.get(v, "")
         lines.append(f"| `{name}` | {bs} | {cs} | {ds} | {mark} {v} |")
     if len(entries) > limit:
         lines.append(f"| … {len(entries) - limit} more rows … | | | | |")
@@ -106,10 +147,18 @@ def markdown_table(entries, limit: int = 40) -> str:
 
 
 def run_gate(current_path: str, baseline_path: str, fail_over: float,
-             warn_over: float, summary_path: str = None) -> int:
+             warn_over: float, summary_path: str = None,
+             fail_over_wall: float = None, warn_over_wall: float = None,
+             lane: str = "all") -> int:
+    if fail_over_wall is None:
+        fail_over_wall = WALL_FAIL_OVER
+    if warn_over_wall is None:
+        warn_over_wall = WALL_WARN_OVER
     base = load_rows(baseline_path)
     cur, cur_errors = load_rows_and_errors(current_path)
-    entries, failures, warnings = diff_rows(base, cur, fail_over, warn_over)
+    entries, failures, warnings = diff_rows(
+        base, cur, fail_over, warn_over, fail_over_wall, warn_over_wall,
+        lane)
     # a figure that errored in the current run is a hard failure: its
     # tracked rows would otherwise all degrade to "missing" warnings and
     # a catastrophically broken run would read as a pass
@@ -118,10 +167,11 @@ def run_gate(current_path: str, baseline_path: str, fail_over: float,
     n_tracked = sum(1 for e in entries if e[4] != "new")
     verdict = "FAILED" if failures else "passed"
     report = [
-        f"## Perf gate {verdict}",
+        f"## Perf gate {verdict} (lane: {lane})",
         f"{n_tracked} tracked rows vs `{os.path.basename(baseline_path)}` "
-        f"(fail > +{fail_over * 100:.0f}%, warn > +{warn_over * 100:.0f}% "
-        "modeled us_per_call)", "",
+        f"(modeled fail > +{fail_over * 100:.0f}%, warn > "
+        f"+{warn_over * 100:.0f}%; wall fail > +{fail_over_wall * 100:.0f}%, "
+        f"warn > +{warn_over_wall * 100:.0f}%, same env_key only)", "",
         markdown_table(entries), "",
     ]
     if failures:
@@ -146,9 +196,17 @@ def main(argv=None) -> int:
     ap.add_argument("--fail-over", type=float, default=0.20,
                     help="fail when us_per_call regresses past this fraction")
     ap.add_argument("--warn-over", type=float, default=0.05)
+    ap.add_argument("--fail-over-wall", type=float, default=WALL_FAIL_OVER,
+                    help="wall-lane failure threshold (generous: measured "
+                    "time varies with runner load)")
+    ap.add_argument("--warn-over-wall", type=float, default=WALL_WARN_OVER)
+    ap.add_argument("--lane", choices=("all", "modeled", "wall"),
+                    default="all",
+                    help="restrict the gate to one row family")
     args = ap.parse_args(argv)
     return run_gate(args.current, args.baseline, args.fail_over,
-                    args.warn_over, os.environ.get("GITHUB_STEP_SUMMARY"))
+                    args.warn_over, os.environ.get("GITHUB_STEP_SUMMARY"),
+                    args.fail_over_wall, args.warn_over_wall, args.lane)
 
 
 if __name__ == "__main__":

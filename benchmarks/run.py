@@ -23,18 +23,20 @@ import subprocess
 import sys
 import time
 
-ALL = ("fig5", "fig6", "fig7", "fig14", "fig15", "fig16", "fig_fleet",
-       "fleet_serve", "workloads", "roofline")
+ALL = ("fig5", "fig6", "fig7", "fig14", "fig14_wall", "fig15", "fig16",
+       "fig_fleet", "fleet_serve", "workloads", "roofline")
 SCHEMA = "pim-malloc-bench/v1"
 # per-record attribution stamps (the only non-numeric record fields besides
-# name/derived): allocator design point and jax version
-STRING_FIELDS = ("backend", "jax")
+# name/derived): allocator design point, jax version, and for wall-clock
+# rows the row family marker + runner class (see common.wall_env_key)
+STRING_FIELDS = ("backend", "jax", "lane", "env_key")
 
 _MODULES = {
     "fig5": "fig5_design_space",
     "fig6": "fig6_heap_sweep",
     "fig7": "fig7_contention",
     "fig14": "fig14_micro",
+    "fig14_wall": "fig14_wall",
     "fig15": "fig15_cache_size",
     "fig16": "fig16_graph",
     "fig_fleet": "fig_fleet",
@@ -44,17 +46,21 @@ _MODULES = {
 }
 
 
-def env_stamp(smoke: bool) -> dict:
+def env_stamp(smoke: bool, root: str = None) -> dict:
     import jax
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     try:
         commit = subprocess.run(
             ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
             cwd=root, timeout=10).stdout.strip() or "unknown"
         # a baseline generated from an uncommitted tree must say so: the
-        # stamped revision alone could not reproduce its rows
+        # stamped revision alone could not reproduce its rows. Tracked
+        # files only — stray __pycache__/ dirs or editor droppings must
+        # not mark a clean checkout's baseline as irreproducible.
         dirty = subprocess.run(
-            ["git", "status", "--porcelain"], capture_output=True, text=True,
+            ["git", "status", "--porcelain", "--untracked-files=no"],
+            capture_output=True, text=True,
             cwd=root, timeout=10).stdout.strip()
         if commit != "unknown" and dirty:
             commit += "-dirty"

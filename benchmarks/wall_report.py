@@ -1,0 +1,70 @@
+"""Modeled-vs-wall delta table for wall-lane bench rows.
+
+    PYTHONPATH=src python benchmarks/wall_report.py bench_wall.json
+
+Each ``fig14_wall/*`` row carries both its measured ``us_per_call`` and the
+``modeled_us_per_call`` derived from the same executed responses; this
+prints the side-by-side table (GitHub-flavored markdown, appended to
+``$GITHUB_STEP_SUMMARY`` when set) so every CI run shows how far the cost
+model and real execution have drifted, plus the committed batched-refill
+speedup row. Reporting only — the pass/fail decision lives in
+`perf_gate.py`'s wall lane.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def wall_rows(path: str) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = []
+    for cell in doc.get("figs", {}).values():
+        for rec in cell.get("records", []):
+            if rec.get("lane") == "wall":
+                rows.append(rec)
+    return rows
+
+
+def report(path: str) -> str:
+    rows = wall_rows(path)
+    lines = ["## Modeled vs wall-clock (fig14_wall)", "",
+             "| row | modeled us/call | wall us/call | wall/modeled |",
+             "|---|---|---|---|"]
+    for rec in sorted(rows, key=lambda r: r["name"]):
+        name, wall = rec["name"], float(rec.get("us_per_call", 0.0))
+        if "speedup_vs_serial" in rec:
+            lines.append(
+                f"| `{name}` | — | {wall:.2f} | "
+                f"**{rec['speedup_vs_serial']:.2f}x vs serial refill** |")
+            continue
+        modeled = float(rec.get("modeled_us_per_call", 0.0))
+        ratio = wall / modeled if modeled > 0 else float("inf")
+        lines.append(f"| `{name}` | {modeled:.2f} | {wall:.2f} "
+                     f"| {ratio:.1f}x |")
+    if not rows:
+        lines.append("| (no wall rows in artifact) | | | |")
+    env = next((r.get("env_key") for r in rows if r.get("env_key")), None)
+    if env:
+        lines += ["", f"env_key: `{env}`"]
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="bench JSON with wall rows")
+    args = ap.parse_args(argv)
+    text = report(args.current)
+    print(text)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

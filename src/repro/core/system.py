@@ -175,6 +175,11 @@ class SystemConfig:
     sw_buf: SWBufferConfig = SWBufferConfig()
     bc: BuddyCacheConfig = BuddyCacheConfig()
     dpu: DPUCost = DPUCost()
+    # ``pallas`` kind only: batched same-class backend refill inside the
+    # fused kernel. None defers to PIM_MALLOC_BATCH_REFILL (default on);
+    # False forces the pre-batching serial walk. Bitwise-identical either
+    # way — this is a wall-clock knob, not a semantic one.
+    kernel_batch_refill: bool = None
 
     def __post_init__(self):
         assert self.kind in KINDS
@@ -505,7 +510,8 @@ def _step_pallas(cfg: SystemConfig, st: SystemState, req: AllocRequest):
         req.op, req.size, req.ptr, al.buddy.longest, al.counts, al.stacks,
         al.block_cls, al.block_free, al.big_log2, ca.tags, ca.last_used,
         jnp.reshape(ca.clock, (1,)), heap_bytes=pmc.heap_bytes,
-        block_bytes=pmc.block_bytes, size_classes=pmc.size_classes)
+        block_bytes=pmc.block_bytes, size_classes=pmc.size_classes,
+        batch_refill=cfg.kernel_batch_refill)
 
     m_hit = out.m_hit.astype(bool)
     m_refill = out.m_refill.astype(bool)

@@ -70,6 +70,75 @@ def _alloc_one(tree, size, *, heap_bytes: int, min_block: int, depth: int):
     return tree, jnp.where(ok, offset, jnp.int32(-1))
 
 
+# ---------------------------------------------------------------------------
+# Pure-jnp run-carve helpers for the fused kernel's batched refill fast path
+# (`heap_step.protocol_round`). All shapes are static, so they trace inside a
+# Pallas body; every gather/scatter is clipped or drop-mode so the helpers
+# stay safe when evaluated on ineligible data (e.g. under vmap-of-select).
+# ---------------------------------------------------------------------------
+
+
+def leftmost_block(tree, *, heap_bytes: int, block_bytes: int, depth: int):
+    """Block index the serial leftmost-fit descent would carve next.
+
+    Replicates `_alloc_one`'s descent at block granularity exactly (same
+    ``tree[left] >= size`` rule), so a batched run-carve starting here lands
+    on the same leaves the serial walks would. Garbage when the tree has no
+    free block — callers gate on ``tree[1] >= block_bytes``.
+    """
+    nb = heap_bytes // block_bytes
+
+    def down(_, node):
+        left = 2 * node
+        go_left = tree[left] >= block_bytes
+        return jnp.where(go_left, left, left + 1)
+
+    node = lax.fori_loop(0, depth, down, jnp.int32(1))
+    return node - nb
+
+
+def run_blocks_free(tree, b0, n, *, window: int, heap_bytes: int,
+                    block_bytes: int):
+    """True iff blocks ``b0 .. b0+n-1`` are all free (``n <= window``).
+
+    A leaf may carry a stale ``longest`` after an ancestor was carved as a
+    bigger chunk, so freeness is the min over the leaf's whole root path
+    staying >= ``block_bytes``.
+    """
+    nb = heap_bytes // block_bytes
+    depth = nb.bit_length() - 1
+    leaves = nb + b0 + jnp.arange(window, dtype=jnp.int32)
+    shifts = jnp.arange(depth + 1, dtype=jnp.int32)
+    anc = jnp.minimum(leaves[:, None] >> shifts[None, :], 2 * nb - 1)
+    free = jnp.min(tree[anc], axis=1) >= block_bytes
+    return jnp.all(jnp.where(jnp.arange(window) < n, free, True))
+
+
+def carve_run(tree, b0, n, *, window: int, heap_bytes: int, block_bytes: int):
+    """Carve blocks ``b0 .. b0+n-1`` (all known-free) in one vectorized pass.
+
+    Bitwise-equal to ``n`` serial leftmost `_alloc_one` walks at block
+    granularity: leaves zero left-to-right and every affected ancestor ends
+    at max(children) — the value the last serial up-walk through it writes,
+    since the run's threads drain left subtree before right at every node.
+    """
+    nb = heap_bytes // block_bytes
+    depth = nb.bit_length() - 1
+    n_nodes = 2 * nb
+    k = jnp.arange(window, dtype=jnp.int32)
+    leaf_idx = jnp.where(k < n, nb + b0 + k, n_nodes)
+    tree = tree.at[leaf_idx].set(0, mode="drop")
+    for d in range(1, depth + 1):
+        p_lo = (nb + b0) >> d
+        p_hi = (nb + b0 + n - 1) >> d
+        win = p_lo + jnp.arange(window + 1, dtype=jnp.int32)
+        child = jnp.minimum(2 * win, n_nodes - 2)
+        newval = jnp.maximum(tree[child], tree[child + 1])
+        idx = jnp.where(win <= p_hi, win, n_nodes)
+        tree = tree.at[idx].set(newval, mode="drop")
+    return tree
+
+
 def _kernel(sizes_ref, tree_ref, offs_ref, tree_out_ref, *, heap_bytes: int,
             min_block: int, depth: int):
     tree = tree_ref[0, :]

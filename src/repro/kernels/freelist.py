@@ -39,6 +39,28 @@ def _kernel(op_ref, cls_ref, ptr_in_ref, stacks_ref, counts_ref,
     counts_out_ref[0, c] = cnt + delta
 
 
+def bulk_refill(stacks, counts, sel, cls, rows, new_counts):
+    """Vectorized same-round freelist refill (batched backend fast path).
+
+    For every thread ``t`` with ``sel[t]``: replace
+    ``stacks[t, cls[t], :rows.shape[1]]`` with ``rows[t]`` and set
+    ``counts[t, cls[t]] = new_counts[t]``; other threads, classes and stack
+    slots beyond the refill width are untouched. Pure jnp (traces inside
+    the fused Pallas body); bitwise-equal to the serial per-thread refill
+    in `heap_step.protocol_round`'s backend loop.
+    """
+    T, NC, CAP = stacks.shape
+    width = rows.shape[1]
+    pick_cls = sel[:, None] & (
+        jnp.arange(NC, dtype=jnp.int32)[None, :] == cls[:, None])
+    lane = jnp.arange(CAP, dtype=jnp.int32)[None, None, :] < width
+    rows_cap = jnp.pad(rows, ((0, 0), (0, CAP - width)))
+    stacks = jnp.where(pick_cls[:, :, None] & lane, rows_cap[:, None, :],
+                       stacks)
+    counts = jnp.where(pick_cls, new_counts[:, None], counts)
+    return stacks, counts
+
+
 def freelist_op_kernel(stacks, counts, op, cls, ptr_in, *, interpret: bool = False):
     """Apply one freelist op per thread.
 

@@ -32,10 +32,27 @@ fig15-style cache sweeps work unchanged on the kernel path.
 `protocol_round` is the pure-jnp round body; the kernel loads refs, runs
 it, and stores the results, so interpret mode (CPU CI) and the compiled
 TPU path share one implementation.
+
+**Batched same-class refill (``batch_refill``, default on).** When every
+backend op of a round allocates at block granularity — refills always do,
+and bypasses do whenever ``next_pow2(size) == block_bytes`` — leftmost-fit
+guarantees the k-th needy thread (in mutex order) carves leaf ``b0 + k``,
+where ``b0`` is the leftmost free block. The kernel then serves the whole
+round with ONE vectorized run-carve (`buddy_traverse.carve_run`) plus a
+bulk freelist refill (`freelist.bulk_refill`) and an exact replay of the
+serial threads' LRU-cache access sequence, instead of T serial buddy
+walks; rounds with no backend op skip the walk entirely, and rounds with
+odd (> block) bypass classes fall back to the serial loop. All three
+paths are bitwise-equal — responses, state, cache counters — so the hwsw
+contract above is unchanged (pinned by tests/test_pallas_heap.py's
+batch-vs-serial parametrization). Disable via
+``PIM_MALLOC_BATCH_REFILL=0`` or ``SystemConfig(kernel_batch_refill=
+False)`` (the wall-clock bench lane measures both).
 """
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple
 
 import jax
@@ -46,6 +63,9 @@ from jax.experimental import pallas as pl
 from repro.core.buddy import ilog2 as _ilog2
 from repro.core.buddy import next_pow2 as _next_pow2
 from repro.core.buddy_cache import NODES_PER_WORD
+from repro.kernels.buddy_traverse import carve_run, leftmost_block, \
+    run_blocks_free
+from repro.kernels.freelist import bulk_refill
 
 INVALID = -1  # plain int: Pallas kernels cannot close over array constants
 
@@ -187,7 +207,8 @@ class FusedRoundOut(NamedTuple):
 def protocol_round(op, size, ptr, longest, counts, stacks, block_cls,
                    block_free, big_log2, tags, last_used, clock,
                    class_sizes=None, *, heap_bytes: int, block_bytes: int,
-                   size_classes: tuple) -> FusedRoundOut:
+                   size_classes: tuple,
+                   batch_refill: bool = False) -> FusedRoundOut:
     """Pure-jnp body of the fused round (the kernel runs exactly this).
 
     Mirrors `system._protocol_round` over the pim_malloc primitives: realloc
@@ -196,6 +217,10 @@ def protocol_round(op, size, ptr, longest, counts, stacks, block_cls,
     serial backend), one batched free phase (FREE + vacated realloc blocks),
     with every backend tree touch passing through the in-kernel LRU cache in
     mutex serialization order (malloc phase drains first).
+
+    ``batch_refill=True`` routes block-granularity backend rounds through
+    the vectorized run-carve fast path (see module docstring); ``False``
+    always runs the original serial walks — both are bitwise-identical.
     """
     T = op.shape[0]
     nb = heap_bytes // block_bytes
@@ -311,9 +336,93 @@ def protocol_round(op, size, ptr, longest, counts, stacks, block_cls,
 
     carry = (longest, counts, stacks, block_cls, block_free, big_log2, cache,
              jnp.int32(0), z - 1, z - 1, z, z, z, z, z)
+
+    def _serial_backend(ca):
+        return lax.fori_loop(0, T, mstep, ca)
+
+    if batch_refill:
+        need_i = need.astype(jnp.int32)
+        n_need = jnp.sum(need_i)
+        rank = jnp.cumsum(need_i) - need_i  # mutex order among needy threads
+        alloc_size = jnp.where(
+            bypass, _next_pow2(jnp.maximum(msizes, block_bytes)),
+            jnp.int32(block_bytes))
+        all_block = jnp.all(jnp.where(need, alloc_size == block_bytes, True))
+        b0 = leftmost_block(longest, heap_bytes=heap_bytes,
+                            block_bytes=block_bytes, depth=depth)
+        run_ok = run_blocks_free(longest, b0, n_need, window=T,
+                                 heap_bytes=heap_bytes,
+                                 block_bytes=block_bytes)
+        eligible = (all_block & (longest[1] >= block_bytes)
+                    & (b0 + n_need <= nb) & run_ok)
+
+        def _skip_backend(ca):
+            return ca  # idle defaults in `carry` already match the serial loop
+
+        def _fast_backend(ca):
+            (longest, counts, stacks, block_cls, block_free, big_log2, cache,
+             border, m_ptr, m_bpos, m_okb, m_lvd, m_lvu, m_hits, m_miss) = ca
+            blocks = b0 + rank
+            leaf = nb + blocks
+            # exact serial LRU access order: per needy thread root + down
+            # path + up path (INVALID lanes for non-needy are state no-ops)
+            sh_dn = depth - 1 - jnp.arange(depth, dtype=jnp.int32)
+            sh_up = 1 + jnp.arange(depth, dtype=jnp.int32)
+            seq = jnp.concatenate([
+                jnp.full((T, 1), 1, jnp.int32),
+                leaf[:, None] >> sh_dn[None, :],
+                leaf[:, None] >> sh_up[None, :]], axis=1)
+            seq = jnp.where(need[:, None], seq, INVALID).reshape(-1)
+
+            def acc(cache, node):
+                cache, h, m = _access(cache, node)
+                return cache, (h, m)
+
+            cache, (hh, mm) = lax.scan(acc, cache, seq, unroll=16)
+            k = 2 * depth + 1
+            m_hits = hh.reshape(T, k).sum(axis=1)
+            m_miss = mm.reshape(T, k).sum(axis=1)
+
+            longest = carve_run(longest, b0, n_need, window=T,
+                                heap_bytes=heap_bytes,
+                                block_bytes=block_bytes)
+
+            off = blocks * block_bytes
+            csize = class_sizes[c]
+            sub = block_bytes // csize
+            offs = (off[:, None]
+                    + jnp.arange(max_sub, dtype=jnp.int32)[None, :]
+                    * csize[:, None])
+            rows = jnp.where(jnp.arange(max_sub)[None, :] < sub[:, None],
+                             offs, INVALID)
+            stacks, counts = bulk_refill(stacks, counts, refill, c, rows,
+                                         sub - 1)
+            bsel = jnp.where(refill, blocks, nb)
+            block_cls = block_cls.at[bsel].set(c, mode="drop")
+            block_free = block_free.at[bsel].set(sub - 1, mode="drop")
+            big_log2 = big_log2.at[jnp.where(bypass, blocks, nb)].set(
+                _ilog2(jnp.int32(block_bytes)), mode="drop")
+
+            ptr_refill = off + (sub - 1) * csize
+            m_ptr = jnp.where(refill, ptr_refill,
+                              jnp.where(bypass, off, INVALID))
+            m_bpos = jnp.where(need, rank, INVALID)
+            lvl = jnp.full((T,), depth, jnp.int32)
+            m_lvd = jnp.where(need, lvl, 0)
+            m_lvu = jnp.where(need, lvl, 0)
+            return (longest, counts, stacks, block_cls, block_free, big_log2,
+                    cache, n_need, m_ptr, m_bpos, need_i, m_lvd, m_lvu,
+                    m_hits, m_miss)
+
+        branch = jnp.where(n_need == 0, 0,
+                           jnp.where(eligible, 1, 2)).astype(jnp.int32)
+        out_b = lax.switch(branch,
+                           (_skip_backend, _fast_backend, _serial_backend),
+                           carry)
+    else:
+        out_b = _serial_backend(carry)
     (longest, counts, stacks, block_cls, block_free, big_log2, cache, _,
-     m_ptr_b, m_bpos, m_okb, m_lvd, m_lvu, m_hits, m_miss) = lax.fori_loop(
-        0, T, mstep, carry)
+     m_ptr_b, m_bpos, m_okb, m_lvd, m_lvu, m_hits, m_miss) = out_b
     mptrs = jnp.where(hit, ptr_a, m_ptr_b)
     mok = m_active & (mptrs >= 0)
 
@@ -352,9 +461,17 @@ def protocol_round(op, size, ptr, longest, counts, stacks, block_cls,
         border = border + big_t.astype(jnp.int32)
         return longest, big_log2, cache, border, f_bpos, f_lvu, f_hits, f_miss
 
-    longest, big_log2, cache, _, f_bpos, f_lvu, f_hits, f_miss = \
-        lax.fori_loop(0, T, fstep,
-                      (longest, big_log2, cache, jnp.int32(0), z - 1, z, z, z))
+    fcarry = (longest, big_log2, cache, jnp.int32(0), z - 1, z, z, z)
+    if batch_refill:
+        # a round with no backend free skips the serial coalescing loop:
+        # fstep with fbig[t]=False everywhere is a state no-op (INVALID
+        # cache accesses, masked writes), so the defaults are bitwise-equal
+        out_f = lax.cond(jnp.any(fbig),
+                         lambda ca: lax.fori_loop(0, T, fstep, ca),
+                         lambda ca: ca, fcarry)
+    else:
+        out_f = lax.fori_loop(0, T, fstep, fcarry)
+    longest, big_log2, cache, _, f_bpos, f_lvu, f_hits, f_miss = out_f
 
     tags, last_used, clock = cache
     i32 = lambda m: m.astype(jnp.int32)  # noqa: E731
@@ -374,34 +491,58 @@ def protocol_round(op, size, ptr, longest, counts, stacks, block_cls,
 def _kernel(op_ref, size_ref, ptr_ref, longest_ref, counts_ref, stacks_ref,
             bcls_ref, bfree_ref, blog_ref, tags_ref, lu_ref, clock_ref,
             csizes_ref, *out_refs, heap_bytes: int, block_bytes: int,
-            size_classes: tuple):
+            size_classes: tuple, batch_refill: bool):
     out = protocol_round(
         op_ref[...], size_ref[...], ptr_ref[...], longest_ref[...],
         counts_ref[...], stacks_ref[...], bcls_ref[...], bfree_ref[...],
         blog_ref[...], tags_ref[...], lu_ref[...], clock_ref[0],
         csizes_ref[...], heap_bytes=heap_bytes, block_bytes=block_bytes,
-        size_classes=size_classes)
+        size_classes=size_classes, batch_refill=batch_refill)
     vals = list(out)
     vals[8] = jnp.reshape(vals[8], (1,))  # clock back to its [1] slot
     for ref, val in zip(out_refs, vals):
         ref[...] = val
 
 
-@functools.partial(jax.jit, static_argnames=("heap_bytes", "block_bytes",
-                                             "size_classes", "interpret"))
+def _batch_refill_default() -> bool:
+    """Env-resolved default for the batched fast path (on unless disabled)."""
+    return os.environ.get("PIM_MALLOC_BATCH_REFILL", "1").lower() not in (
+        "0", "false", "off")
+
+
 def fused_heap_step(op, size, ptr, longest, counts, stacks, block_cls,
                     block_free, big_log2, tags, last_used, clock, *,
                     heap_bytes: int, block_bytes: int, size_classes: tuple,
-                    interpret: bool | None = None) -> FusedRoundOut:
+                    interpret: bool | None = None,
+                    batch_refill: bool | None = None) -> FusedRoundOut:
     """One fused protocol round for a single core (clock is int32[1]).
 
     Batch across cores/ranks with `vmap` — Pallas maps the batch onto the
     kernel grid; this is what `heap.MultiCoreHeap` / `heap.ShardedHeap` do
-    through the registered ``pallas`` backend.
+    through the registered ``pallas`` backend. ``batch_refill=None``
+    resolves from ``PIM_MALLOC_BATCH_REFILL`` (default on); both settings
+    are bitwise-identical, ``False`` merely forces the pre-batching serial
+    walk (the wall-clock bench lane's comparison point).
     """
     if interpret is None:
         from repro.kernels.ops import on_tpu
         interpret = not on_tpu()
+    if batch_refill is None:
+        batch_refill = _batch_refill_default()
+    return _fused_heap_step(
+        op, size, ptr, longest, counts, stacks, block_cls, block_free,
+        big_log2, tags, last_used, clock, heap_bytes=heap_bytes,
+        block_bytes=block_bytes, size_classes=size_classes,
+        interpret=bool(interpret), batch_refill=bool(batch_refill))
+
+
+@functools.partial(jax.jit, static_argnames=("heap_bytes", "block_bytes",
+                                             "size_classes", "interpret",
+                                             "batch_refill"))
+def _fused_heap_step(op, size, ptr, longest, counts, stacks, block_cls,
+                     block_free, big_log2, tags, last_used, clock, *,
+                     heap_bytes: int, block_bytes: int, size_classes: tuple,
+                     interpret: bool, batch_refill: bool) -> FusedRoundOut:
     T = op.shape[0]
     out_shape = FusedRoundOut(
         longest=jax.ShapeDtypeStruct(longest.shape, jnp.int32),
@@ -417,7 +558,8 @@ def fused_heap_step(op, size, ptr, longest, counts, stacks, block_cls,
            for f in FusedRoundOut._fields[9:]})
     kern = functools.partial(_kernel, heap_bytes=heap_bytes,
                              block_bytes=block_bytes,
-                             size_classes=tuple(size_classes))
+                             size_classes=tuple(size_classes),
+                             batch_refill=batch_refill)
     out = pl.pallas_call(kern, out_shape=list(out_shape),
                          interpret=interpret)(
         op, size, ptr, longest, counts, stacks, block_cls, block_free,

@@ -1,0 +1,82 @@
+"""The CI workflows are config-as-code: pin their syntax and the invariants
+this repo's lanes rely on (bench-wall step, nightly dispatchability, pip
+caching) so a stray YAML edit fails tier-1 instead of the first push."""
+import os
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+ROOT = os.path.join(os.path.dirname(__file__), os.pardir)
+WF = os.path.join(ROOT, ".github", "workflows")
+
+
+def _load(name):
+    with open(os.path.join(WF, name)) as f:
+        return yaml.safe_load(f)
+
+
+def _steps(job):
+    return job.get("steps", [])
+
+
+def _run_text(job):
+    return "\n".join(s.get("run", "") for s in _steps(job))
+
+
+def test_ci_workflow_is_valid_yaml_with_expected_jobs():
+    doc = _load("ci.yml")
+    assert set(doc["jobs"]) >= {"lint", "analysis", "tier1", "bench-smoke"}
+
+
+def test_bench_smoke_job_runs_wall_lane_and_both_gates():
+    """Acceptance: the bench-wall step runs the wall-clock lane, the wall
+    gate is exercised (not skipped) with --lane wall, and the JSON rides
+    the uploaded artifact."""
+    job = _load("ci.yml")["jobs"]["bench-smoke"]
+    text = _run_text(job)
+    assert "fig14_wall" in text and "bench_wall.json" in text
+    assert "--lane wall" in text and "--fail-over-wall" in text
+    assert "--lane modeled" in text
+    assert "wall_report.py" in text
+    upload = [s for s in _steps(job)
+              if "upload-artifact" in str(s.get("uses", ""))]
+    assert upload and "bench_wall.json" in upload[0]["with"]["path"]
+
+
+def test_nightly_workflow_scheduled_and_dispatchable():
+    """The nightly lane must be cron-scheduled AND workflow_dispatch-able
+    (the acceptance path for syntax validation), run the non-smoke sweep,
+    and raise the fuzzer budget above the PR smoke lane's 15."""
+    doc = _load("nightly.yml")
+    trig = doc.get("on") or doc.get(True)  # yaml 1.1 parses bare `on:` as True
+    assert "schedule" in trig and "workflow_dispatch" in trig
+    jobs = doc["jobs"]
+    bench = _run_text(jobs["bench-full"])
+    assert "benchmarks.run" in bench and "--smoke" not in bench
+    fuzz = _run_text(jobs["fuzz-deep"])
+    assert "FUZZ_MAX_EXAMPLES=" in fuzz
+    budget = int(fuzz.split("FUZZ_MAX_EXAMPLES=")[1].split()[0])
+    assert budget > 15
+
+
+def test_all_setup_python_steps_cache_pip():
+    """Every job in every workflow must enable actions/setup-python pip
+    caching — cold dependency installs dominate lane latency."""
+    for wf in ("ci.yml", "nightly.yml"):
+        for jname, job in _load(wf)["jobs"].items():
+            for s in _steps(job):
+                if "setup-python" in str(s.get("uses", "")):
+                    cfg = s.get("with", {})
+                    assert cfg.get("cache") == "pip", f"{wf}:{jname}"
+                    assert cfg.get("cache-dependency-path"), f"{wf}:{jname}"
+
+
+def test_pytest_timeout_session_default_configured():
+    """pyproject pins a session-wide pytest-timeout default and the plugin
+    is in requirements.txt, so CI hangs fail fast."""
+    with open(os.path.join(ROOT, "pyproject.toml")) as f:
+        py = f.read()
+    assert "timeout = " in py.split("[tool.pytest.ini_options]")[1]
+    with open(os.path.join(ROOT, "requirements.txt")) as f:
+        assert "pytest-timeout" in f.read()

@@ -489,3 +489,94 @@ def test_prop_tiny_cap_streams_match_numpy_model(seed):
     cfg = _cfg("pallas", size_classes=(512, 1024, 2048), cap=8)
     _drive_model_vs_kernel(cfg, rounds=10, seed=seed,
                            sizes_pool=(512, 700, 1024, 2048, 8192))
+
+
+# --------------------------------------------- batched refill fast path
+def _cfg_batch(batch):
+    pmc = pm.PimMallocConfig(heap_bytes=HEAP, num_threads=T)
+    return sysm.SystemConfig(kind="pallas", heap_bytes=HEAP, num_threads=T,
+                             pm=pmc, kernel_batch_refill=batch)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_batched_refill_bitwise_equals_serial_walk(seed):
+    """Acceptance: `kernel_batch_refill` is a pure wall-clock knob — on
+    arbitrary mixed streams the batched kernel and the forced-serial kernel
+    (and hwsw) agree bitwise on every response field and state leaf."""
+    rng = random.Random(seed)
+    steppers = [(_stepper(_cfg_batch(True))), (_stepper(_cfg_batch(False))),
+                (_stepper(_cfg("hwsw")))]
+    live = [[] for _ in range(T)]
+    for r in range(12):
+        roll = rng.random()
+        if roll < 0.6:
+            sizes = jnp.array([rng.choice([16, 64, 256, 2048, 4096, 8192])
+                               for _ in range(T)], jnp.int32)
+            req = heap.malloc_request(sizes)
+        else:
+            ptrs = [live[t].pop(rng.randrange(len(live[t])))
+                    if live[t] and rng.random() < 0.8 else -1
+                    for t in range(T)]
+            req = heap.free_request(jnp.array(ptrs, jnp.int32))
+        resps = [run(req) for _, run in steppers]
+        _assert_resp_equal(resps[0], resps[1], f"batch-vs-serial round={r}")
+        _assert_resp_equal(resps[0], resps[2], f"batch-vs-hwsw round={r}")
+        _assert_state_equal(steppers[0][0]["st"], steppers[1][0]["st"],
+                            f"state batch-vs-serial round={r}")
+        _assert_state_equal(steppers[0][0]["st"], steppers[2][0]["st"],
+                            f"state batch-vs-hwsw round={r}")
+        for t in range(T):
+            if int(resps[0].ptr[t]) >= 0:
+                live[t].append(int(resps[0].ptr[t]))
+
+
+def test_batched_refill_covers_all_backend_branches():
+    """Crafted rounds drive each lax.switch branch — empty-skip (all-hit),
+    vectorized run-carve (block-granularity refills AND 4096-byte
+    bypasses), and the serial fallback (odd >block bypass class) — plus
+    the backend-free coalescing round; every one stays bitwise-equal."""
+    sp, run_p = _stepper(_cfg_batch(True))
+    ss, run_s = _stepper(_cfg_batch(False))
+    sh, run_h = _stepper(_cfg("hwsw"))
+
+    def check(req, msg):
+        rp, rs, rh = run_p(req), run_s(req), run_h(req)
+        _assert_resp_equal(rp, rs, msg + " (vs serial)")
+        _assert_resp_equal(rp, rh, msg + " (vs hwsw)")
+        _assert_state_equal(sp["st"], ss["st"], msg + " state (vs serial)")
+        _assert_state_equal(sp["st"], sh["st"], msg + " state (vs hwsw)")
+        return rp
+
+    # branch 0: prepopulated freelists -> all-hit round, no backend op
+    check(heap.malloc_request(jnp.array([32] * T, jnp.int32)), "all-hit")
+    # branch 1 (bypass flavor): 4096 == block_bytes -> run-carve
+    r_b = check(heap.malloc_request(jnp.array([4096] * T, jnp.int32)),
+                "block bypass")
+    # branch 1 (refill flavor): drain one class then re-alloc it
+    for _ in range(pm.PimMallocConfig(heap_bytes=HEAP, num_threads=T
+                                      ).block_bytes // 256 + 2):
+        req = heap.malloc_request(jnp.array([256] * T, jnp.int32))
+        last = check(req, "drain 256B class")
+        if int(np.asarray(last.path)[0]) == 1:  # refill round reached
+            break
+    # mixed refill + block bypass in one round still takes the fast path
+    check(heap.malloc_request(jnp.array([256, 4096, 256, 4096], jnp.int32)),
+          "mixed refill+bypass")
+    # branch 2: odd class (8192 > block_bytes) falls back to the serial walk
+    check(heap.malloc_request(jnp.array([8192, 256, 8192, 16], jnp.int32)),
+          "odd-class fallback")
+    # backend free (fbig): the free-phase skip cond must take the loop
+    check(heap.free_request(r_b.ptr), "buddy coalescing frees")
+
+
+def test_batch_refill_env_default(monkeypatch):
+    """PIM_MALLOC_BATCH_REFILL gates the default; explicit config wins."""
+    from repro.kernels import heap_step
+    monkeypatch.delenv("PIM_MALLOC_BATCH_REFILL", raising=False)
+    assert heap_step._batch_refill_default() is True
+    monkeypatch.setenv("PIM_MALLOC_BATCH_REFILL", "0")
+    assert heap_step._batch_refill_default() is False
+    monkeypatch.setenv("PIM_MALLOC_BATCH_REFILL", "off")
+    assert heap_step._batch_refill_default() is False
+    monkeypatch.setenv("PIM_MALLOC_BATCH_REFILL", "1")
+    assert heap_step._batch_refill_default() is True

@@ -178,3 +178,131 @@ def test_repo_baseline_is_schema_valid():
     assert len(tracked) >= 10
     # the baseline must cover the new backend axis
     assert any("pallas" in n for n in rows)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock row family
+# ---------------------------------------------------------------------------
+
+ENV = "linux-x86_64-cpu-interpret"
+
+
+def _wall_doc(modeled, wall, env_key=ENV):
+    doc = _doc(modeled)
+    doc["figs"]["fig14_wall"] = {"status": "ok", "wall_s": 1.0, "records": [
+        {"name": n, "us_per_call": v, "derived": "", "lane": "wall",
+         "env_key": env_key} for n, v in wall.items()]}
+    return doc
+
+
+WALL = {"fig14_wall/pallas/size=32/threads=16": 10.0,
+        "fig14_wall/kernel_batch_speedup": 200.0}
+
+
+def test_wall_rows_use_wall_thresholds_not_modeled(tmp_path):
+    """A +40% wall drift passes (generous wall threshold) while the same
+    +40% on a modeled row fails — the two families never share thresholds."""
+    wall_cur = {n: v * 1.4 for n, v in WALL.items()}
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "cur.json", _wall_doc(BASE, wall_cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    mod_cur = dict(BASE)
+    mod_cur["fig14/hwsw/size=32"] = BASE["fig14/hwsw/size=32"] * 1.4
+    c2 = _write(tmp_path, "cur2.json", _wall_doc(mod_cur, WALL))
+    assert perf_gate.run_gate(c2, b, 0.20, 0.05) == 1
+
+
+def test_injected_wall_regression_fails(tmp_path, capsys):
+    """Acceptance: a wall regression past --fail-over-wall exits non-zero."""
+    wall_cur = {n: v * 3.0 for n, v in WALL.items()}  # +200% > +150%
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "cur.json", _wall_doc(BASE, wall_cur))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 1
+    out = capsys.readouterr().out
+    assert "wall" in out and "FAIL" in out
+
+
+def test_wall_rows_only_gated_against_same_env(tmp_path, capsys):
+    """A wall baseline from a different runner class (env_key mismatch) is
+    skipped informationally — compiled-device and CPU-interpret numbers
+    must never cross-gate."""
+    wall_cur = {n: v * 10.0 for n, v in WALL.items()}  # huge, but other env
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "cur.json",
+               _wall_doc(BASE, wall_cur, env_key="linux-x86_64-tpu-compiled"))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    assert "env-skip" in capsys.readouterr().out
+
+
+def test_missing_wall_row_warns_not_fails(tmp_path, capsys):
+    """A wall row absent from the current run is a warning — wall coverage
+    loss must not hard-fail the way modeled coverage loss does."""
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "cur.json", _doc(BASE))  # no wall rows at all
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    out = capsys.readouterr().out
+    assert "wall row missing" in out and "no-wall" in out
+
+
+def test_lane_filter_restricts_gate(tmp_path):
+    """--lane wall ignores modeled rows entirely (a wall-only artifact must
+    not trip 'tracked row disappeared'), and --lane modeled ignores wall."""
+    wall_only = _wall_doc({}, WALL)
+    del wall_only["figs"]["fig14"]
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "wall_only.json", wall_only)
+    assert perf_gate.run_gate(c, b, 0.20, 0.05, lane="wall") == 0
+    assert perf_gate.run_gate(c, b, 0.20, 0.05, lane="all") == 1
+    mod_only = _write(tmp_path, "mod_only.json", _doc(BASE))
+    assert perf_gate.run_gate(mod_only, b, 0.20, 0.05, lane="modeled") == 0
+
+
+def test_custom_wall_threshold_cli(tmp_path):
+    """--fail-over-wall from the CLI overrides the default wall threshold."""
+    wall_cur = {n: v * 1.4 for n, v in WALL.items()}
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "cur.json", _wall_doc(BASE, wall_cur))
+    assert perf_gate.main([c, "--baseline", b,
+                           "--fail-over-wall", "0.30"]) == 1
+    assert perf_gate.main([c, "--baseline", b,
+                           "--fail-over-wall", "3.0"]) == 0
+
+
+def test_repo_baseline_has_wall_speedup_row():
+    """Acceptance: the committed baseline carries the >=2x batched-refill
+    wall speedup row, env-keyed for the gate."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    rows = perf_gate.load_rows(os.path.join(root, "BENCH_BASELINE.json"))
+    rec = rows["fig14_wall/kernel_batch_speedup"]
+    assert rec.get("lane") == "wall" and rec.get("env_key")
+    assert float(rec["speedup_vs_serial"]) >= 2.0
+
+
+# ---------------------------------------------------------------------------
+# env_stamp dirty-check (benchmarks/run.py)
+# ---------------------------------------------------------------------------
+
+def _git(tmp, *args):
+    import subprocess
+    return subprocess.run(
+        ["git", "-c", "user.email=t@t", "-c", "user.name=t", *args],
+        cwd=tmp, capture_output=True, text=True, check=True)
+
+
+def test_env_stamp_ignores_untracked_pycache(tmp_path):
+    """A clean checkout with stray __pycache__ dirs must NOT stamp -dirty:
+    the committed revision fully reproduces the rows."""
+    from benchmarks import run as bench_run
+    _git(tmp_path, "init", "-q")
+    (tmp_path / "f.py").write_text("x = 1\n")
+    _git(tmp_path, "add", "f.py")
+    _git(tmp_path, "commit", "-qm", "init")
+    cache = tmp_path / "__pycache__"
+    cache.mkdir()
+    (cache / "f.cpython-311.pyc").write_bytes(b"\x00")
+    stamp = bench_run.env_stamp(True, root=str(tmp_path))
+    assert not stamp["commit"].endswith("-dirty")
+    # ... but a modified *tracked* file still must
+    (tmp_path / "f.py").write_text("x = 2\n")
+    stamp = bench_run.env_stamp(True, root=str(tmp_path))
+    assert stamp["commit"].endswith("-dirty")
