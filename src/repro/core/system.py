@@ -48,7 +48,16 @@ from .heap import (OP_CALLOC, OP_FREE, OP_MALLOC, OP_NOOP, OP_REALLOC,
                    AllocRequest, AllocResponse)
 from .pim_malloc import INVALID, PimMallocConfig
 
-KINDS = ("strawman", "sw", "hwsw", "pallas", "sanitizer")
+# Backend enumeration has ONE source of truth: the protocol registry
+# (`heap.REGISTRY`, populated by the `@heap.register` decorators below).
+# `KINDS` is derived from it on attribute access (PEP 562), so registering
+# a backend — from this module or anywhere else — auto-enrolls it in every
+# KINDS-parametrized suite (pinned in tests/test_heap_api.py).
+def __getattr__(name: str):
+    if name == "KINDS":
+        heap._ensure_backends()
+        return tuple(heap.REGISTRY)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # --------------------------------------------------------------------------
@@ -182,7 +191,9 @@ class SystemConfig:
     kernel_batch_refill: bool = None
 
     def __post_init__(self):
-        assert self.kind in KINDS
+        heap._ensure_backends()
+        assert self.kind in heap.REGISTRY, \
+            f"unknown kind {self.kind!r} (registered: {tuple(heap.REGISTRY)})"
         if self.pm is None:
             object.__setattr__(self, "pm", PimMallocConfig(
                 heap_bytes=self.heap_bytes, num_threads=self.num_threads))

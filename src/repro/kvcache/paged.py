@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import api, heap
+from repro.core import api
 from repro.core.heap import AllocResponse
 
 PAGE_UNIT = 16  # allocator bytes per page (smallest size class)
@@ -232,35 +232,62 @@ class PagePool:
     """Host-side page allocator for serving: PIM-malloc manages page ids.
 
     Pages are allocator 'bytes' at PAGE_UNIT per page; ptr -> page_id =
-    ptr // PAGE_UNIT. Built on the `repro.core.heap` protocol through the
-    Table-2 facade, so serving shares one allocator surface (and one jitted
-    step) with the simulators, and every call also yields the DPU cost
-    model's per-thread latencies (`pool.alloc.last_info`). One pool per
+    ptr // PAGE_UNIT. Built on a `repro.core.api.HeapClient`, so serving
+    shares one allocator surface (and one jitted step) with the simulators
+    and the serving engines, and every call also yields the DPU cost
+    model's per-thread latencies (`pool.client.last_info`). One pool per
     device shard — a multi-device pool is `heap.MultiCoreHeap` / shard_map
     over the data axis (see examples/serve_paged.py).
+
+    Every page free routes through the protocol's free path — a stale or
+    repeated page id reaches the backend and shows up in
+    `Stats.dropped_frees` (and as a deterministic ``double_free`` /
+    ``use_after_free`` tag on the ``sanitizer`` kind) instead of being
+    silently absorbed host-side (pinned in tests/test_serve_decode.py).
     """
 
     def __init__(self, n_pages: int, num_threads: int = 16, kind: str = "sw",
-                 alloc=None):
-        """``alloc`` injects an Allocator-compatible handle (heap must span
-        n_pages * PAGE_UNIT bytes) — e.g. a
+                 client: api.HeapClient = None, alloc=None):
+        """``client`` injects a `HeapClient` whose heap spans
+        n_pages * PAGE_UNIT bytes — e.g. a
         `repro.workloads.trace.RecordingAllocator`, so serving churn can be
-        captured as an AllocRequest tape and replayed on every backend."""
+        captured as an AllocRequest tape and replayed on every backend.
+
+        ``alloc`` is the deprecated PR-4 injection hook: an
+        Allocator-compatible handle (or zero-arg factory returning one).
+        Still accepted, but warns and is adapted via `HeapClient.wrap`.
+        """
         assert n_pages & (n_pages - 1) == 0, "n_pages must be pow2"
         self.n_pages = n_pages
-        if alloc is None:
-            alloc = api.Allocator(
+        if alloc is not None:
+            import warnings
+            warnings.warn(
+                "PagePool(alloc=...) is deprecated: pass client=HeapClient "
+                "(or any HeapClient subclass); bare handles/factories are "
+                "adapted via HeapClient.wrap for now",
+                DeprecationWarning, stacklevel=2)
+            if client is not None:
+                raise TypeError("pass either client= or (deprecated) alloc=")
+            client = api.HeapClient.wrap(alloc)
+        if client is None:
+            client = api.HeapClient(
                 heap_bytes=n_pages * PAGE_UNIT, num_threads=num_threads,
                 kind=kind,
             )
-        assert alloc.cfg.heap_bytes == n_pages * PAGE_UNIT, \
-            (alloc.cfg.heap_bytes, n_pages * PAGE_UNIT)
-        self.alloc = alloc
-        self.cfg = self.alloc.cfg.pm  # block_bytes=4096: 256-page refills
+        elif not isinstance(client, api.HeapClient):
+            raise TypeError(
+                f"client must be a HeapClient, got {type(client).__name__!r}"
+                " (legacy handles go through the deprecated alloc= hook)")
+        assert client.cfg.heap_bytes == n_pages * PAGE_UNIT, \
+            (client.cfg.heap_bytes, n_pages * PAGE_UNIT)
+        self.client = client
+        # back-compat alias: pre-PR-8 callers read `pool.alloc.last_info`
+        self.alloc = client
+        self.cfg = self.client.cfg.pm  # block_bytes=4096: 256-page refills
 
     def alloc_pages(self, n: int, thread: int = 0) -> jnp.ndarray:
         """Contiguous extent of `n` pages; returns page ids [n] (empty on OOM)."""
-        ptr = self.alloc.pimMalloc(n * PAGE_UNIT, thread=thread)
+        ptr = self.client.malloc(n * PAGE_UNIT, thread=thread)
         if ptr < 0:
             return jnp.zeros((0,), jnp.int32)
         return ptr // PAGE_UNIT + jnp.arange(n, dtype=jnp.int32)
@@ -270,12 +297,12 @@ class PagePool:
         threads: bool[T] mask. Returns (int32[T] page ids (-1 = none), resp)."""
         threads = jnp.asarray(threads)
         sizes = jnp.where(threads, PAGE_UNIT, 0).astype(jnp.int32)
-        resp = self.alloc.request(heap.malloc_request(sizes, threads))
+        resp = self.client.malloc_batch(sizes, threads)
         return jnp.where(resp.ptr >= 0, resp.ptr // PAGE_UNIT, -1), resp
 
     def grow_extent(self, first_page: int, n_pages: int,
                     thread: int = 0) -> tuple[jnp.ndarray, bool]:
-        """pimRealloc an extent to `n_pages` pages.
+        """realloc an extent to `n_pages` pages.
 
         Returns (page ids [n], moved). ids is empty on OOM (the old extent
         then remains live). When `moved` is True the allocator relocated the
@@ -283,11 +310,11 @@ class PagePool:
         KV contents into the returned ids before its next allocation, or the
         old pages may be handed to another sequence.
         """
-        new_ptr = self.alloc.pimRealloc(int(first_page) * PAGE_UNIT,
-                                        n_pages * PAGE_UNIT, thread=thread)
+        new_ptr = self.client.realloc(int(first_page) * PAGE_UNIT,
+                                      n_pages * PAGE_UNIT, thread=thread)
         if new_ptr < 0:
             return jnp.zeros((0,), jnp.int32), False
-        moved = bool(self.alloc.last_info.moved[thread])
+        moved = bool(self.client.last_info.moved[thread])
         return new_ptr // PAGE_UNIT + jnp.arange(n_pages, dtype=jnp.int32), moved
 
     def free_page_batch(self, pages) -> AllocResponse:
@@ -295,14 +322,43 @@ class PagePool:
         int32[T] page ids, -1 = nothing to free on that slot."""
         pages = jnp.asarray(pages, jnp.int32)
         ptrs = jnp.where(pages >= 0, pages * PAGE_UNIT, -1)
-        return self.alloc.request(heap.free_request(ptrs))
+        return self.client.free_batch(ptrs)
 
     def free_extent(self, first_page: int, thread: int = 0) -> None:
-        self.alloc.pimFree(int(first_page) * PAGE_UNIT, thread=thread)
+        self.client.free(int(first_page) * PAGE_UNIT, thread=thread)
+
+    def evict(self, first_page: int, decode_pages, thread: int = 0) -> dict:
+        """Session-end eviction: free ALL decode pages, then the extent,
+        every free through the protocol.
+
+        ``decode_pages`` (any length — chunked into T-wide free rounds; the
+        pre-PR-8 recorder truncated at T and silently leaked the tail) and
+        the extent at ``first_page`` (skipped when < 0, e.g. a session that
+        died before its prefill extent was allocated). Returns
+        ``{"freed_pages", "dropped_frees"}`` — a nonzero ``dropped_frees``
+        means a stale/double page id reached the backend's dropped-free
+        path (deterministically tagged on the ``sanitizer`` kind).
+        """
+        T = self.client.cfg.num_threads
+        ids = [int(p) for p in np.asarray(decode_pages, np.int64).reshape(-1)
+               if int(p) >= 0]
+        freed = dropped = 0
+        for i in range(0, len(ids), T):
+            chunk = np.full((T,), -1, np.int32)
+            chunk[:len(ids[i:i + T])] = ids[i:i + T]
+            resp = self.free_page_batch(chunk)
+            freed += len(ids[i:i + T])
+            dropped += int(np.asarray((resp.path == 2)
+                                      & (chunk >= 0)).sum())
+        if int(first_page) >= 0:
+            self.free_extent(first_page, thread=thread)
+            info = self.client.last_info
+            dropped += int(np.asarray(info.path[thread] == 2))
+        return {"freed_pages": freed, "dropped_frees": dropped}
 
     def gc(self) -> None:
-        self.alloc.gc()
+        self.client.gc()
 
     @property
     def stats(self) -> dict:
-        return self.alloc.stats
+        return self.client.stats

@@ -156,7 +156,7 @@ def main():
     total = args.decode_steps * B
     print(f"decode: {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s CPU-{args.impl})")
-    alloc_us = alloc_cyc / pool.alloc.cfg.dpu.freq_hz * 1e6
+    alloc_us = alloc_cyc / pool.client.cfg.dpu.freq_hz * 1e6
     print(f"frontend page allocations during decode: {n_page_allocs} "
           f"({alloc_us:.2f} us modeled DPU time)")
     print("final allocator stats:", pool.stats)

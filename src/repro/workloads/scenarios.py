@@ -78,7 +78,9 @@ def record_kv_paged(smoke: bool = True, kind: str = RECORD_KIND) -> Trace:
     steps = 24 if smoke else 96
     rec = RecordingAllocator(heap_bytes=n_pages * PAGE_UNIT,
                              num_threads=T, kind=kind)
-    pool = PagePool(n_pages=n_pages, num_threads=T, alloc=rec)
+    # a RecordingAllocator IS a HeapClient (request() override taping every
+    # round) — no adapter needed since the alloc= hook was retired
+    pool = PagePool(n_pages=n_pages, num_threads=T, client=rec)
     rng = np.random.default_rng(11)
 
     # one serving slot per thread: each holds (extent_first, extent_pages,
@@ -107,15 +109,13 @@ def record_kv_paged(smoke: bool = True, kind: str = RECORD_KIND) -> Trace:
             if ids.shape[0]:
                 slots[t].update(first=int(ids[0]),
                                 pages=slots[t]["pages"] * 2)
-        # eviction: finished sequences free decode pages then the extent,
-        # and a fresh sequence prefills into the vacated slot
+        # eviction: finished sequences free ALL decode pages then the
+        # extent through the protocol (PagePool.evict — the pre-PR-8
+        # recorder truncated the drain at T and leaked the tail), and a
+        # fresh sequence prefills into the vacated slot
         if step % 4 == 2:
             t = int(rng.integers(T))
-            drain = np.full(T, -1, np.int64)
-            for i, p in enumerate(slots[t]["decode"][:T]):
-                drain[i] = p
-            pool.free_page_batch(jnp.asarray(drain, jnp.int32))
-            pool.free_extent(slots[t]["first"], thread=t)
+            pool.evict(slots[t]["first"], slots[t]["decode"], thread=t)
             n = int(rng.choice(extent_choices))
             ext = pool.alloc_pages(n, thread=t)
             slots[t] = {"first": int(ext[0]) if ext.shape[0] else -1,
@@ -144,8 +144,29 @@ def record_hashtable(smoke: bool = True, kind: str = RECORD_KIND) -> Trace:
         meta=stats)
 
 
+def record_decode_serve(smoke: bool = True, kind: str = RECORD_KIND) -> Trace:
+    """The busiest core's slice of a DecodeServe session (paged-KV LLM
+    decode: Zipf tenants, prefill bursts, page-per-token appends,
+    eviction), exported through `ScanEngine.trace` — the serving engine's
+    page traffic IS a standard tape (no separate recorder)."""
+    from repro.core import system as sysm
+    from repro.launch.serve_decode import DecodeServe, DecodeTraffic
+
+    T = 4 if smoke else 16
+    cfg = sysm.SystemConfig(kind=kind, heap_bytes=1 << 20, num_threads=T)
+    tc = DecodeTraffic(seed=29, rounds=24 if smoke else 96,
+                       session_rate=1.5 if smoke else 6.0, num_tenants=8,
+                       queue_cap=16)
+    eng = DecodeServe(cfg, 2, 2, traffic=tc, mesh=False)
+    plan = eng.plan()
+    # the Zipf head tenant's home is the hottest heap in the fleet
+    rank, core = plan.tenant_home.get(0, (0, 0))
+    return eng.trace(plan, rank, core, name="decode_serve")
+
+
 SCENARIOS = {
     "graph_churn": record_graph_churn,
     "kv_paged": record_kv_paged,
     "hashtable": record_hashtable,
+    "decode_serve": record_decode_serve,
 }

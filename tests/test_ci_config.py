@@ -29,6 +29,17 @@ def test_ci_workflow_is_valid_yaml_with_expected_jobs():
     assert set(doc["jobs"]) >= {"lint", "analysis", "tier1", "bench-smoke"}
 
 
+def test_tier1_matrix_has_decode_smoke_lane():
+    """Acceptance: the decode serving tier rides tier-1 — the suite plus
+    the example CLI as a closed-loop smoke."""
+    job = _load("ci.yml")["jobs"]["tier1"]
+    lanes = {e["suite"]: e["run"]
+             for e in job["strategy"]["matrix"]["include"]}
+    assert "decode-smoke" in lanes
+    assert "tests/test_serve_decode.py" in lanes["decode-smoke"]
+    assert "examples/serve_decode.py --smoke" in lanes["decode-smoke"]
+
+
 def test_bench_smoke_job_runs_wall_lane_and_both_gates():
     """Acceptance: the bench-wall step runs the wall-clock lane, the wall
     gate is exercised (not skipped) with --lane wall, and the JSON rides

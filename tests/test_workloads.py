@@ -78,10 +78,10 @@ def test_replay_reproduces_recording_bitwise():
 
 # ------------------------------------------------- committed-tape acceptance
 def test_committed_tapes_exist():
-    assert len(TAPES) >= 3, TAPES
+    assert len(TAPES) >= 4, TAPES
     names = {os.path.basename(p) for p in TAPES}
-    assert {"graph_churn.json", "kv_paged.json",
-            "hashtable.json"} <= names
+    assert {"graph_churn.json", "kv_paged.json", "hashtable.json",
+            "decode_serve.json"} <= names
 
 
 @pytest.mark.parametrize("path", TAPES, ids=os.path.basename)
@@ -150,7 +150,7 @@ def test_kv_paged_pool_records_through_injection():
 
     rec = RecordingAllocator(heap_bytes=(1 << 16) * PAGE_UNIT,
                              num_threads=8, kind="hwsw")
-    pool = PagePool(n_pages=1 << 16, num_threads=8, alloc=rec)
+    pool = PagePool(n_pages=1 << 16, num_threads=8, client=rec)
     ext = pool.alloc_pages(512)
     singles, _ = pool.alloc_page_batch([True] * 4 + [False] * 4)
     pool.free_page_batch(jnp.where(jnp.asarray(singles) >= 0,
@@ -161,6 +161,34 @@ def test_kv_paged_pool_records_through_injection():
     results = replay_all_kinds(trace, kinds=("hwsw", "pallas"))
     assert (results["hwsw"][1]["digest_full"]
             == results["pallas"][1]["digest_full"])
+
+
+def test_kv_paged_pool_deprecated_alloc_hook_warns_but_works():
+    """The PR-4 bare-handle hook keeps working through HeapClient.wrap,
+    but only behind a DeprecationWarning; a handle that satisfies neither
+    contract is rejected outright."""
+    import pytest
+
+    from repro.core.api import HeapClient
+    from repro.kvcache.paged import PAGE_UNIT, PagePool
+
+    rec = RecordingAllocator(heap_bytes=(1 << 16) * PAGE_UNIT,
+                             num_threads=8, kind="hwsw")
+    with pytest.warns(DeprecationWarning, match="client=HeapClient"):
+        pool = PagePool(n_pages=1 << 16, num_threads=8, alloc=rec)
+    assert pool.client is rec                 # a HeapClient passes through
+    assert pool.alloc_pages(4).shape == (4,)  # and still serves pages
+
+    # a zero-arg factory (the truly bare callable) adapts with the warning
+    with pytest.warns(DeprecationWarning):
+        pool2 = PagePool(
+            n_pages=1 << 16, num_threads=8,
+            alloc=lambda: HeapClient(heap_bytes=(1 << 16) * PAGE_UNIT,
+                                     num_threads=8, kind="sw"))
+    assert pool2.alloc_pages(2).shape == (2,)
+
+    with pytest.raises(TypeError):
+        HeapClient.wrap(object())
 
 
 def test_graph_insert_delete_matches_reference():
