@@ -1,0 +1,133 @@
+"""fig_arena: the layered-frontend design points (arena / tlregion) vs the
+buddy-backed baseline, on the two workloads epoch reset is built for.
+
+Two lanes, both modeled (deterministic functions of the cost model, so
+every row is perf-gate trackable):
+
+  * **graph_churn tape** — the committed dynamic-graph churn tape replayed
+    on strawman / hwsw / arena / tlregion: small node cells served by the
+    O(1) bump frontend (``arena``: shared region, atomic-bump wait;
+    ``tlregion``: per-thread regions, zero cross-thread wait) vs the
+    freelist+buddy baseline. Rows are modeled us/op.
+  * **FleetServe expiry lane** — the same external arrival stream served
+    two ways: ``hwsw`` with explicit per-block expiry FREEs vs the arena
+    kinds in ``TrafficConfig.epoch_rounds`` mode (small blocks become
+    round-scoped Temp allocations, reclaimed by whole-grid
+    ``OP_EPOCH_RESET`` rounds; big bypass blocks keep explicit expiry).
+    Rows are modeled wall us per *external* request served
+    (``us_per_call`` — management traffic is overhead, not calls).
+
+The module **raises** — an errored figure, which the perf gate hard-fails —
+if either arena kind stops beating the buddy-only baseline on its lane:
+the layering win is an acceptance criterion, not a trend to drift.
+
+Sessions and the tape are smoke-sized, so ``--smoke`` and full runs
+measure identical rows (same policy as fig_workloads).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.core import system as sysm
+from repro.launch.serve_fleet import FleetServe, TrafficConfig
+from repro.workloads.replay import replay
+from repro.workloads.trace import Trace
+
+from .common import emit
+
+TAPES_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tapes")
+
+TAPE_KINDS = ("strawman", "hwsw", "arena", "tlregion")
+
+# the expiry-lane session: one arrival stream (seed-pinned), served with
+# explicit expiry frees on hwsw and in epoch mode on the arena kinds
+SERVE = dict(R=1, C=2, T=8, heap=1 << 21, rounds=32, rate=12.0,
+             tenants=12, seed=5, epoch_rounds=8)
+
+
+def _serve(kind: str, epoch_rounds: int):
+    cfg = sysm.SystemConfig(kind=kind, heap_bytes=SERVE["heap"],
+                            num_threads=SERVE["T"])
+    tc = TrafficConfig(seed=SERVE["seed"], rounds=SERVE["rounds"],
+                       arrival_rate=SERVE["rate"],
+                       num_tenants=SERVE["tenants"],
+                       epoch_rounds=epoch_rounds)
+    eng = FleetServe(cfg, SERVE["R"], SERVE["C"], traffic=tc,
+                     placement="round_robin")
+    _, rep = eng.serve()
+    return rep
+
+
+def bench(smoke: bool = False):
+    recs = []
+
+    # -- lane 1: the committed graph_churn tape ---------------------------
+    tape = Trace.load(os.path.join(TAPES_DIR, "graph_churn.json"))
+    us = {}
+    for kind in TAPE_KINDS:
+        _, _, rep = replay(tape, kind)
+        us[kind] = rep["us_per_op"]
+        tel = rep["telemetry"]
+        recs.append(emit(
+            f"fig_arena/graph_churn/{kind}", rep["us_per_op"],
+            f"ok={rep['ok_ops']}/{rep['ops']};"
+            f"wall={rep['modeled_wall_us']:.2f}us", backend=kind,
+            ok_ops=rep["ok_ops"], failed_allocs=rep["failed_allocs"],
+            dropped_frees=rep["dropped_frees"],
+            live_bytes=tel["live_bytes"],
+            conservation_residual=tel["conservation_residual"]))
+    for kind in ("arena", "tlregion"):
+        if us[kind] >= us["hwsw"]:
+            raise RuntimeError(
+                f"layering regression: {kind} ({us[kind]:.4f} us/op) no "
+                f"longer beats hwsw ({us['hwsw']:.4f}) on graph_churn")
+    recs.append(emit(
+        "fig_arena/graph_churn/claim_speedup", 0.0,
+        f"arena={us['hwsw'] / us['arena']:.2f}x "
+        f"tlregion={us['hwsw'] / us['tlregion']:.2f}x vs hwsw",
+        arena_speedup=us["hwsw"] / us["arena"],
+        tlregion_speedup=us["hwsw"] / us["tlregion"]))
+
+    # -- lane 2: the FleetServe expiry lane -------------------------------
+    calls = {}
+    for name, kind, er in (("hwsw_explicit", "hwsw", 0),
+                           ("arena_epoch", "arena", SERVE["epoch_rounds"]),
+                           ("tlregion_epoch", "tlregion",
+                            SERVE["epoch_rounds"])):
+        t0 = time.time()
+        rep = _serve(kind, er)
+        assert rep["failed_allocs"] == 0, (name, rep["failed_allocs"])
+        assert rep["conservation_residual"] == 0, name
+        calls[name] = rep["us_per_call"]
+        recs.append(emit(
+            f"fig_arena/expiry/{name}", rep["us_per_call"],
+            f"ext={rep['external_dispatched']};"
+            f"frees={rep['expiry_frees_dispatched']};"
+            f"p95={rep['e2e_p95_cyc']:.0f}cyc;"
+            f"backlog={rep['backlog_end']}", backend=kind,
+            external_dispatched=rep["external_dispatched"],
+            expiry_frees_dispatched=rep["expiry_frees_dispatched"],
+            epoch_resets=rep.get("epoch_resets", 0),
+            epoch_managed_allocs=rep.get("epoch_managed_allocs", 0),
+            e2e_p95_cyc=rep["e2e_p95_cyc"], backlog_end=rep["backlog_end"],
+            modeled_wall_us=rep["modeled_wall_us"],
+            wall_s=time.time() - t0))
+    for name in ("arena_epoch", "tlregion_epoch"):
+        if calls[name] >= calls["hwsw_explicit"]:
+            raise RuntimeError(
+                f"epoch-reset regression: {name} ({calls[name]:.4f} "
+                f"us/call) no longer beats hwsw explicit expiry "
+                f"({calls['hwsw_explicit']:.4f}) on the serve lane")
+    recs.append(emit(
+        "fig_arena/expiry/claim_speedup", 0.0,
+        f"arena={calls['hwsw_explicit'] / calls['arena_epoch']:.2f}x "
+        f"tlregion={calls['hwsw_explicit'] / calls['tlregion_epoch']:.2f}x "
+        "vs explicit expiry",
+        arena_speedup=calls["hwsw_explicit"] / calls["arena_epoch"],
+        tlregion_speedup=calls["hwsw_explicit"] / calls["tlregion_epoch"]))
+    return recs
+
+
+def run():
+    bench()

@@ -26,9 +26,11 @@ in one of two families:
 ``--lane modeled|wall`` restricts the gate to one family (CI runs the
 modeled gate on the full smoke artifact and the wall gate on the
 bench-wall artifact separately); default ``all`` gates both. Improvements
-and newly appearing rows report informationally, and the delta table is
-written as GitHub-flavored markdown to ``$GITHUB_STEP_SUMMARY`` when that
-env var is set (always to stdout). Refreshing the baseline after an
+and newly appearing rows report informationally, and the delta table —
+grouped by row family (modeled, then wall), each group worst-first and
+closed with a per-lane subtotal (summed us, aggregate delta, verdict
+counts) — is written as GitHub-flavored markdown to
+``$GITHUB_STEP_SUMMARY`` when that env var is set (always to stdout). Refreshing the baseline after an
 intentional perf change is documented in benchmarks/README.md ("Perf gate
 & baseline refresh").
 """
@@ -77,8 +79,8 @@ def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float,
               lane: str = "all"):
     """Compare tracked rows; returns (entries, failures, warnings).
 
-    entries: (name, base_us, cur_us, delta, verdict) sorted worst-first;
-    delta is None for missing/new/env-skipped rows.
+    entries: (name, base_us, cur_us, delta, verdict, lane) sorted
+    worst-first; delta is None for missing/new/env-skipped rows.
     """
     if fail_over_wall is None:
         fail_over_wall = WALL_FAIL_OVER
@@ -89,7 +91,8 @@ def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float,
                if r.get("us_per_call", 0) > 0
                and lane in ("all", row_lane(r))}
     for name, brec in sorted(tracked.items()):
-        wall = row_lane(brec) == "wall"
+        rl = row_lane(brec)
+        wall = rl == "wall"
         b = float(brec["us_per_call"])
         crec = cur.get(name)
         if crec is None:
@@ -97,16 +100,16 @@ def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float,
                 warnings.append(
                     f"wall row missing from current run: {name} "
                     "(wall lane warns, never fails, on absence)")
-                entries.append((name, b, None, None, "no-wall"))
+                entries.append((name, b, None, None, "no-wall", rl))
             else:
                 failures.append(f"tracked row disappeared: {name} "
                                 "(refresh BENCH_BASELINE.json if intentional)")
-                entries.append((name, b, None, None, "MISSING"))
+                entries.append((name, b, None, None, "MISSING", rl))
             continue
         c = float(crec["us_per_call"])
         if wall and str(brec.get("env_key")) != str(crec.get("env_key")):
             # different runner class: wall numbers are not comparable
-            entries.append((name, b, c, None, "env-skip"))
+            entries.append((name, b, c, None, "env-skip", rl))
             continue
         delta = c / b - 1.0
         fo, wo = ((fail_over_wall, warn_over_wall) if wall
@@ -121,28 +124,59 @@ def diff_rows(base: dict, cur: dict, fail_over: float, warn_over: float,
             warnings.append(f"{name}: +{delta * 100:.1f}%")
         else:
             verdict = "ok"
-        entries.append((name, b, c, delta, verdict))
+        entries.append((name, b, c, delta, verdict, rl))
     for name in sorted(set(cur) - set(base)):
         if lane not in ("all", row_lane(cur[name])):
             continue
         entries.append((name, None,
-                        float(cur[name].get("us_per_call", 0.0)), None, "new"))
+                        float(cur[name].get("us_per_call", 0.0)), None, "new",
+                        row_lane(cur[name])))
     entries.sort(key=lambda e: (-(e[3] if e[3] is not None else -1e9), e[0]))
     return entries, failures, warnings
 
 
 def markdown_table(entries, limit: int = 40) -> str:
+    """Delta table grouped by row family (modeled, then wall), each group
+    worst-first and closed by a subtotal row: summed tracked us on both
+    sides, the aggregate delta of those sums, and per-verdict counts. The
+    row budget (`limit`) is shared across groups."""
     lines = ["| row | baseline us | current us | delta | verdict |",
              "|---|---|---|---|---|"]
-    for name, b, c, d, v in entries[:limit]:
-        bs = f"{b:.4f}" if b is not None else "—"
-        cs = f"{c:.4f}" if c is not None else "—"
-        ds = f"{d * 100:+.1f}%" if d is not None else "—"
-        mark = {"FAIL": "❌", "warn": "⚠️", "MISSING": "❌", "no-wall": "⚠️",
-                "env-skip": "ℹ️", "new": "🆕", "ok": ""}.get(v, "")
-        lines.append(f"| `{name}` | {bs} | {cs} | {ds} | {mark} {v} |")
-    if len(entries) > limit:
-        lines.append(f"| … {len(entries) - limit} more rows … | | | | |")
+    shown = 0
+    for fam in ("modeled", "wall"):
+        group = [e for e in entries if e[5] == fam]
+        if not group:
+            continue
+        lines.append(f"| **{fam} lane** — {len(group)} rows | | | | |")
+        for name, b, c, d, v, _ in group[:max(0, limit - shown)]:
+            bs = f"{b:.4f}" if b is not None else "—"
+            cs = f"{c:.4f}" if c is not None else "—"
+            ds = f"{d * 100:+.1f}%" if d is not None else "—"
+            mark = {"FAIL": "❌", "warn": "⚠️", "MISSING": "❌",
+                    "no-wall": "⚠️", "env-skip": "ℹ️", "new": "🆕",
+                    "ok": ""}.get(v, "")
+            lines.append(f"| `{name}` | {bs} | {cs} | {ds} | {mark} {v} |")
+        hidden = len(group) - max(0, limit - shown)
+        if hidden > 0:
+            lines.append(f"| … {hidden} more {fam} rows … | | | | |")
+        shown += len(group)
+        # subtotal over rows compared on both sides (delta is not None)
+        cmp_rows = [e for e in group if e[3] is not None]
+        counts = {}
+        for e in group:
+            counts[e[4]] = counts.get(e[4], 0) + 1
+        cstr = " ".join(f"{k}={counts[k]}" for k in
+                        ("ok", "warn", "FAIL", "MISSING", "no-wall",
+                         "env-skip", "new") if k in counts)
+        if cmp_rows:
+            sb = sum(e[1] for e in cmp_rows)
+            sc = sum(e[2] for e in cmp_rows)
+            sd = (sc / sb - 1.0) if sb > 0 else 0.0
+            lines.append(f"| _{fam} subtotal ({len(cmp_rows)} compared)_ | "
+                         f"{sb:.4f} | {sc:.4f} | {sd * 100:+.1f}% | {cstr} |")
+        else:
+            lines.append(f"| _{fam} subtotal (0 compared)_ | — | — | — | "
+                         f"{cstr} |")
     return "\n".join(lines)
 
 

@@ -24,7 +24,8 @@ import sys
 import time
 
 ALL = ("fig5", "fig6", "fig7", "fig14", "fig14_wall", "fig15", "fig16",
-       "fig_fleet", "fleet_serve", "fig_decode", "workloads", "roofline")
+       "fig_fleet", "fleet_serve", "fig_decode", "workloads", "fig_arena",
+       "roofline")
 SCHEMA = "pim-malloc-bench/v1"
 # per-record attribution stamps (the only non-numeric record fields besides
 # name/derived): allocator design point, jax version, and for wall-clock
@@ -43,6 +44,7 @@ _MODULES = {
     "fleet_serve": "fig_serve",
     "fig_decode": "fig_decode",
     "workloads": "fig_workloads",
+    "fig_arena": "fig_arena",
     "roofline": "roofline",
 }
 

@@ -136,14 +136,30 @@ class HeapClient:
     def calloc_batch(self, nmemb, sizes, active=None) -> AllocResponse:
         return self.request(heap.calloc_request(nmemb, sizes, active))
 
+    def epoch_reset(self, active=None) -> AllocResponse:
+        """Retire the current allocation epoch (``OP_EPOCH_RESET``).
+
+        On the ``arena`` kind any active thread clears the whole shared
+        bump region (idempotent across threads in one round); on
+        ``tlregion`` each active thread clears only its own region. Every
+        pointer the arena handed out this epoch is invalid afterwards —
+        the caller must drop its references (the ``trace_lint`` rule).
+        Backends without an arena frontend answer the round as idle, and
+        the ``sanitizer`` retires every LIVE shadow start to STALE and
+        tags later uses as ``epoch_stale``."""
+        return self.request(heap.epoch_reset_request(
+            self.cfg.num_threads, active))
+
     # -- maintenance / introspection -----------------------------------------
     def gc(self) -> None:
         """Merge fully-free thread-cache blocks back into the buddy.
 
-        Works on every pim-style kind (sw/hwsw/pallas/sanitizer share the
-        PimMallocState layout in `.alloc` — the sanitizer's shadow map and
-        quarantine describe live allocations, which gc never moves);
-        strawman has no thread caches to merge."""
+        Works on every pim-style kind (sw/hwsw/pallas/sanitizer/arena/
+        tlregion share the PimMallocState layout in `.alloc` — the
+        sanitizer's shadow map and quarantine describe live allocations,
+        which gc never moves, and the arena kinds' bump region lives
+        outside the backend's thread caches entirely); strawman has no
+        thread caches to merge."""
         if self.cfg.kind == "strawman":
             return
         # gc moves fully-free cached blocks back to the buddy: live bytes

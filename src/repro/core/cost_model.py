@@ -34,6 +34,14 @@ class DPUCost:
     cyc_node: int = 40           # per-level compare/branch/address arithmetic
     cyc_meta_hit: int = 2        # metadata access served from scratchpad/buddy cache
     cyc_mutex: int = 44          # mutex acquire/release (WRAM atomic rmw)
+    # arena frontend (bump pointer): the O(1) fast path of the layered split.
+    # A bump alloc is a class calc + one WRAM add; on the shared arena the
+    # add must be atomic, so concurrent bumpers serialize for ~2 cyc each
+    # (far below cyc_mutex — the point of the design). Epoch reset is a
+    # constant-cost pointer rewind + epoch bump, amortized over every block.
+    cyc_bump: int = 6            # size-class calc + bump-pointer add
+    cyc_bump_atomic: int = 2     # per-contender serialization on the shared add
+    cyc_epoch_reset: int = 64    # rewind + epoch counter + lg-map clear kickoff
     # MRAM (per-bank DRAM) DMA
     mram_setup_cyc: int = 88     # ~250 ns engine setup
     mram_bytes_per_cyc: float = 2.0   # ~700 MB/s per-DPU streaming

@@ -37,14 +37,18 @@ from jax import lax
 
 # Per-thread op codes (int32). CALLOC is MALLOC + zero-fill cost; the request
 # carries the total byte count (nmemb * size), see `calloc_request`.
+# EPOCH_RESET is the arena frontend's bulk-free: every arena-resident block
+# is retired in O(1) (non-arena backends treat it as an idle round).
 OP_NOOP = 0
 OP_MALLOC = 1
 OP_FREE = 2
 OP_REALLOC = 3
 OP_CALLOC = 4
+OP_EPOCH_RESET = 5
 
 OP_NAMES = {OP_NOOP: "noop", OP_MALLOC: "malloc", OP_FREE: "free",
-            OP_REALLOC: "realloc", OP_CALLOC: "calloc"}
+            OP_REALLOC: "realloc", OP_CALLOC: "calloc",
+            OP_EPOCH_RESET: "epoch_reset"}
 
 NULL_PTR = -1  # the protocol's NULL: free(-1) is benign, alloc failure returns it
 
@@ -156,6 +160,21 @@ def realloc_request(ptrs, sizes, active=None) -> AllocRequest:
     return AllocRequest(op=op.astype(jnp.int32),
                         size=jnp.where(on & (eff > 0), eff, 0),
                         ptr=jnp.where(keep_ptr, ptrs, -1))
+
+
+def epoch_reset_request(num_threads: int, active=None) -> AllocRequest:
+    """EPOCH_RESET: bulk-retire the arena frontend's current epoch.
+
+    On the shared ``arena`` kind one resetting thread suffices (the op is
+    idempotent within a round); on ``tlregion`` each active thread resets its
+    own region. Backends without an arena frontend serve it as an idle round
+    (ok=False, path -1), so mixed-kind tapes replay everywhere.
+    """
+    z = jnp.zeros((num_threads,), jnp.int32)
+    on = _mask(active, z.shape)
+    return AllocRequest(
+        op=jnp.where(on, OP_EPOCH_RESET, OP_NOOP).astype(jnp.int32),
+        size=z, ptr=z - 1)
 
 
 def calloc_request(nmemb, sizes, active=None) -> AllocRequest:

@@ -315,3 +315,151 @@ class PyPimMalloc:
             del self.block_cls[b]
             del self.block_free[b]
             self.stats["gc_blocks"] += 1
+
+
+class PyArena:
+    """Reference for core.arena — the layered bump frontend over the backend.
+
+    Mirrors `arena.step` phase for phase (reset at round start, ownership
+    classification against the post-reset map, bump allocation in thread
+    order, forwarded backend round, merge), wrapping a `PyPimMalloc` the way
+    the JAX arena wraps hwsw. ``tlregion=True`` gives each thread a private
+    region (the ``tlregion`` design point); otherwise one shared bump.
+    tests/test_differential_fuzz.py pins arena/tlregion == this oracle
+    pointer-for-pointer on the semantic response fields.
+    """
+
+    GRANULE = 16
+    OP_RESET = 5
+
+    def __init__(self, heap_bytes=1 << 20, num_threads=4,
+                 size_classes=(16, 32, 64, 128, 256, 512, 1024, 2048),
+                 block_bytes=4096, cap=1024, tlregion=False):
+        self.inner = PyPimMalloc(
+            heap_bytes=heap_bytes, num_threads=num_threads,
+            size_classes=size_classes, block_bytes=block_bytes, cap=cap,
+            prepopulate=False)
+        self.ab = heap_bytes // 2
+        assert self.ab % block_bytes == 0
+        off = self.inner.buddy.alloc(self.ab)
+        assert off == 0, "pristine leftmost-descent carve must land at 0"
+        self.T = num_threads
+        self.tl = tlregion
+        self.n_gran = self.ab // self.GRANULE
+        if tlregion:
+            assert self.n_gran % num_threads == 0
+            self.region_gran = self.n_gran // num_threads
+        else:
+            self.region_gran = self.n_gran
+        self.cls_map = {}              # start granule -> size-class index
+        self.bump = [0] * (num_threads if tlregion else 1)
+        self.epoch = 0
+
+    def request(self, op, size, ptr):
+        """One layered protocol round; returns {"ptr","ok","path","moved"}."""
+        T = self.T
+        classes = self.inner.cfg["classes"]
+        max_class = classes[-1]
+        OP_MALLOC, OP_FREE, OP_REALLOC, OP_CALLOC = 1, 2, 3, 4
+        is_reset = [op[t] == self.OP_RESET for t in range(T)]
+
+        # phase 0: epoch reset at round start (tl: own region; shared: all)
+        if self.tl:
+            for t in range(T):
+                if is_reset[t]:
+                    lo = t * self.region_gran
+                    hi = lo + self.region_gran
+                    for g in [g for g in self.cls_map if lo <= g < hi]:
+                        del self.cls_map[g]
+                    self.bump[t] = 0
+        elif any(is_reset):
+            self.cls_map.clear()
+            self.bump[0] = 0
+        self.epoch += int(any(is_reset))
+
+        # ownership classification against the post-reset, pre-bump map
+        plan = []
+        for t in range(T):
+            o, z, p = op[t], size[t], ptr[t]
+            in_arena = 0 <= p < self.ab and p % self.GRANULE == 0
+            g_old = p // self.GRANULE if in_arena else -1
+            owned = in_arena and g_old in self.cls_map
+            old_cls = self.cls_map[g_old] if owned else -1
+            small = 0 < z <= max_class
+            cls = self.inner._class_of(z) if small else -1
+            is_alloc = o in (OP_MALLOC, OP_CALLOC)
+            is_re = o == OP_REALLOC
+            re_free0 = is_re and z <= 0 and p >= 0
+            arena_free = (o == OP_FREE or re_free0) and owned
+            re_arena = is_re and z > 0 and owned
+            re_inplace = re_arena and small and cls == old_cls
+            re_move = re_arena and not (small and cls == old_cls)
+            plan.append(dict(
+                g_old=g_old, cls=cls, small=small, arena_free=arena_free,
+                re_inplace=re_inplace, re_move=re_move,
+                plain_small=is_alloc and small, reset=is_reset[t]))
+
+        # phase 1: bump allocation (shared arena serializes in thread order;
+        # a failed fit does NOT consume space)
+        for t, pl in enumerate(plan):
+            cand = pl["plain_small"] or (pl["re_move"] and pl["small"])
+            pl["g_new"], pl["served"] = -1, False
+            if not cand:
+                continue
+            gneed = classes[pl["cls"]] // self.GRANULE
+            slot = t if self.tl else 0
+            limit = self.region_gran
+            if self.bump[slot] + gneed <= limit:
+                base = t * self.region_gran if self.tl else 0
+                pl["g_new"] = base + self.bump[slot]
+                pl["served"] = True
+                self.bump[slot] += gneed
+            pl["re_move_bump"] = pl["re_move"] and pl["small"] and pl["served"]
+        for pl in plan:
+            pl.setdefault("re_move_bump", False)
+            pl["arena_alloc"] = pl["plain_small"] and pl["served"]
+            pl["move_to_inner"] = pl["re_move"] and not pl["re_move_bump"]
+            pl["consumed"] = (pl["arena_alloc"] or pl["arena_free"]
+                              or pl["re_inplace"] or pl["re_move_bump"]
+                              or pl["reset"])
+
+        # phase 2: forwarded backend round
+        in_op = [OP_MALLOC if pl["move_to_inner"]
+                 else 0 if pl["consumed"] else op[t]
+                 for t, pl in enumerate(plan)]
+        in_size = [size[t] if pl["move_to_inner"]
+                   else 0 if pl["consumed"] else size[t]
+                   for t, pl in enumerate(plan)]
+        in_ptr = [-1 if pl["consumed"] or pl["move_to_inner"] else ptr[t]
+                  for t, pl in enumerate(plan)]
+        r = self.inner.request(in_op, in_size, in_ptr)
+
+        # phase 3: merge
+        out = {"ptr": [], "ok": [], "path": [], "moved": []}
+        for t, pl in enumerate(plan):
+            move_ok = pl["re_move_bump"] or (pl["move_to_inner"]
+                                             and r["ok"][t])
+            if pl["arena_alloc"] or pl["re_move_bump"]:
+                self.cls_map[pl["g_new"]] = pl["cls"]
+            if pl["arena_free"] or move_ok:
+                self.cls_map.pop(pl["g_old"], None)
+            fwd = not pl["consumed"]       # passthrough or move_to_inner
+            arena_ok = pl["consumed"]      # == the arena-served cases
+            if pl["arena_alloc"] or pl["re_move_bump"]:
+                p_out = pl["g_new"] * self.GRANULE
+            elif pl["re_inplace"]:
+                p_out = ptr[t]
+            elif fwd:
+                p_out = r["ptr"][t]
+            else:
+                p_out = -1
+            out["ptr"].append(p_out)
+            out["ok"].append(r["ok"][t] if fwd else arena_ok)
+            out["path"].append(0 if arena_ok
+                               else (r["path"][t] if fwd else -1))
+            out["moved"].append(pl["re_move_bump"]
+                                or (pl["move_to_inner"] and r["ok"][t])
+                                or (not pl["consumed"]
+                                    and not pl["move_to_inner"]
+                                    and r["moved"][t]))
+        return out

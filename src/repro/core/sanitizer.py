@@ -11,7 +11,9 @@ fuzzer, and tape replays:
   shadow map   one int8 cell per 16 B heap granule, tracking the *start
                granule* of every allocation: LIVE after a successful
                malloc/calloc/realloc, QUARANTINED after an explicit free,
-               MOVED after a relocating realloc retires the old pointer.
+               MOVED after a relocating realloc retires the old pointer,
+               STALE after an EPOCH_RESET round retires every live start
+               wholesale (the arena design points' bulk-invalidation op).
   poisoning    an op through a non-LIVE start granule never reaches the
                wrapped allocator; it is tagged (double_free /
                use_after_free / realloc_after_free / wild) and answered
@@ -40,8 +42,8 @@ from typing import NamedTuple
 import jax.numpy as jnp
 from jax import lax
 
-from .heap import OP_CALLOC, OP_FREE, OP_MALLOC, OP_REALLOC, AllocRequest, \
-    AllocResponse
+from .heap import OP_CALLOC, OP_EPOCH_RESET, OP_FREE, OP_MALLOC, \
+    OP_REALLOC, AllocRequest, AllocResponse
 from .pim_malloc import INVALID
 
 # Shadow is tracked at allocation *start granules*: every pointer the
@@ -54,6 +56,7 @@ SHADOW_FREE = 0    # no allocation starts here
 SHADOW_LIVE = 1    # start of a live allocation
 SHADOW_QUAR = 2    # start of an explicitly freed block, parked in quarantine
 SHADOW_MOVED = 3   # start retired by a relocating realloc (or evicted misuse)
+SHADOW_STALE = 4   # start invalidated wholesale by an EPOCH_RESET round
 
 # per-op misuse tags (state.tags / report schema)
 TAG_NONE = 0
@@ -61,10 +64,12 @@ TAG_DOUBLE_FREE = 1         # free-class op on a QUARANTINED start
 TAG_USE_AFTER_FREE = 2      # free-class op on a MOVED (realloc-retired) start
 TAG_REALLOC_AFTER_FREE = 3  # realloc(size>0) on a QUARANTINED/MOVED start
 TAG_WILD = 4                # op on unmapped / misaligned / out-of-heap ptr
+TAG_EPOCH_STALE = 5         # op on a start retired by an epoch reset
 
 TAG_NAMES = {TAG_NONE: "none", TAG_DOUBLE_FREE: "double_free",
              TAG_USE_AFTER_FREE: "use_after_free",
-             TAG_REALLOC_AFTER_FREE: "realloc_after_free", TAG_WILD: "wild"}
+             TAG_REALLOC_AFTER_FREE: "realloc_after_free", TAG_WILD: "wild",
+             TAG_EPOCH_STALE: "epoch_stale"}
 
 # quarantine capacity: enough slots that every thread can retire several
 # blocks before the oldest one is released back to the wrapped allocator
@@ -84,11 +89,13 @@ class SanReports(NamedTuple):
     wild_ops: jnp.ndarray
     quarantined: jnp.ndarray   # legit frees parked in the ring
     evicted: jnp.ndarray       # ring evictions released to the real free path
+    epoch_resets: jnp.ndarray  # EPOCH_RESET rounds observed
+    epoch_stale: jnp.ndarray   # ops tagged for touching a reset-retired start
 
 
 def _zero_reports() -> SanReports:
     z = jnp.int32(0)
-    return SanReports(z, z, z, z, z, z)
+    return SanReports(z, z, z, z, z, z, z, z)
 
 
 class SanitizerState(NamedTuple):
@@ -166,13 +173,25 @@ def step(cfg, st: SanitizerState, req: AllocRequest, inner_step):
 
     op, size, ptr = req.op, req.size, req.ptr
     n_gran = st.shadow.shape[0]
+
+    # ---- epoch reset applies at round start (arena semantics): every LIVE
+    # start is retired to STALE wholesale; later ops through such a start
+    # are tagged epoch_stale. The wrapped hwsw heap has no arena region, so
+    # the blocks deliberately stay live there (conservation holds) — the
+    # sanitizer models the *pointer-invalidation* side of the reset.
+    is_reset = op == OP_EPOCH_RESET
+    any_reset = jnp.any(is_reset)
+    shadow0 = jnp.where(any_reset & (st.shadow == SHADOW_LIVE),
+                        jnp.int8(SHADOW_STALE), st.shadow)
+
     in_range = (ptr >= 0) & (ptr < cfg.heap_bytes)
     aligned = in_range & (ptr % GRANULE == 0)
     g = jnp.clip(jnp.where(in_range, ptr // GRANULE, 0), 0, n_gran - 1)
-    sh = st.shadow[g]
+    sh = shadow0[g]
     live = aligned & (sh == SHADOW_LIVE)
     quar = aligned & (sh == SHADOW_QUAR)
     moved_sh = aligned & (sh == SHADOW_MOVED)
+    stale = aligned & (sh == SHADOW_STALE)
 
     # free-class: explicit FREE, or realloc(p, size<=0) == free(p). NULL
     # (ptr == -1) stays a benign pass-through no-op, as in every backend.
@@ -183,22 +202,27 @@ def step(cfg, st: SanitizerState, req: AllocRequest, inner_step):
     tag = jnp.zeros_like(op)
     tag = jnp.where(free_class & quar, TAG_DOUBLE_FREE, tag)
     tag = jnp.where(free_class & moved_sh, TAG_USE_AFTER_FREE, tag)
-    tag = jnp.where(free_class & ~live & ~quar & ~moved_sh, TAG_WILD, tag)
+    tag = jnp.where(free_class & stale, TAG_EPOCH_STALE, tag)
+    tag = jnp.where(free_class & ~live & ~quar & ~moved_sh & ~stale,
+                    TAG_WILD, tag)
     tag = jnp.where(realloc_live & (quar | moved_sh),
                     TAG_REALLOC_AFTER_FREE, tag)
-    tag = jnp.where(realloc_live & ~live & ~quar & ~moved_sh, TAG_WILD, tag)
+    tag = jnp.where(realloc_live & stale, TAG_EPOCH_STALE, tag)
+    tag = jnp.where(realloc_live & ~live & ~quar & ~moved_sh & ~stale,
+                    TAG_WILD, tag)
     tagged = tag > 0
 
     quar_free = free_class & live          # legit retire -> quarantine
-    passthrough = ~free_class & ~tagged    # NOOP/MALLOC/CALLOC/live REALLOC
+    # NOOP/MALLOC/CALLOC/live REALLOC (resets are answered locally)
+    passthrough = ~free_class & ~tagged & ~is_reset
 
     # ---- quarantine ring: park legit frees, maybe release the oldest ------
     q_ptr, q_head, q_len, evicted = _quarantine_pass(
         st.q_ptr, st.q_head, st.q_len, quar_free, ptr)
     evict = evicted >= 0
 
-    # ---- pre-step shadow poisoning ----------------------------------------
-    shadow = st.shadow.at[jnp.where(quar_free, g, n_gran)].set(
+    # ---- pre-step shadow poisoning (on the post-reset shadow) -------------
+    shadow = shadow0.at[jnp.where(quar_free, g, n_gran)].set(
         jnp.int8(SHADOW_QUAR), mode="drop")
     g_ev = jnp.clip(jnp.where(evict, evicted // GRANULE, 0), 0, n_gran - 1)
     shadow = shadow.at[jnp.where(evict, g_ev, n_gran)].set(
@@ -233,16 +257,20 @@ def step(cfg, st: SanitizerState, req: AllocRequest, inner_step):
     lat = jnp.where(passthrough, r.latency_cyc,
                     jnp.where(quar_free,
                               dpu.cyc_front_push + r.latency_cyc,
-                              jnp.where(tagged,
-                                        jnp.float32(dpu.cyc_front_hit), 0.0)))
+                              jnp.where(is_reset,
+                                        jnp.float32(dpu.cyc_epoch_reset),
+                                        jnp.where(tagged,
+                                                  jnp.float32(
+                                                      dpu.cyc_front_hit),
+                                                  0.0))))
     path = jnp.where(
         passthrough, r.path,
-        jnp.where(quar_free, 0,
+        jnp.where(quar_free | is_reset, 0,
                   jnp.where(tagged & free_class, 2,
                             jnp.where(tagged & realloc_live, 3, INVALID))))
     resp = AllocResponse(
         ptr=jnp.where(passthrough, r.ptr, INVALID),
-        ok=jnp.where(passthrough, r.ok, quar_free),
+        ok=jnp.where(passthrough, r.ok, quar_free | is_reset),
         path=path.astype(jnp.int32),
         moved=passthrough & r.moved,
         latency_cyc=lat,
@@ -268,6 +296,8 @@ def step(cfg, st: SanitizerState, req: AllocRequest, inner_step):
         wild_ops=rep.wild_ops + jnp.sum(tag == TAG_WILD),
         quarantined=rep.quarantined + jnp.sum(quar_free),
         evicted=rep.evicted + jnp.sum(evict),
+        epoch_resets=rep.epoch_resets + any_reset.astype(jnp.int32),
+        epoch_stale=rep.epoch_stale + jnp.sum(tag == TAG_EPOCH_STALE),
     )
     new_st = SanitizerState(
         alloc=inner_st.alloc._replace(stats=stats), cache=inner_st.cache,

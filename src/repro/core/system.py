@@ -15,6 +15,13 @@
              (`repro.core.sanitizer`) — turns double-free /
              use-after-free / realloc-after-free / wild pointers into
              deterministic tagged reports. The debugging design point.
+  arena    : layered frontend/backend split (`repro.core.arena`): a shared
+             bump-pointer arena serves small allocs in O(1) and retires
+             whole epochs with one EPOCH_RESET op; everything else spills
+             to the full hwsw stack (freelists + buddy). The churn-workload
+             design point.
+  tlregion : the arena frontend with per-thread regions — no cross-thread
+             atomic on the bump fast path (and per-thread epoch resets).
 
 All these kinds serve the `repro.core.heap` request/response protocol: this
 module registers one cost-model-instrumented `heap.step` implementation per
@@ -189,6 +196,12 @@ class SystemConfig:
     # False forces the pre-batching serial walk. Bitwise-identical either
     # way — this is a wall-clock knob, not a semantic one.
     kernel_batch_refill: bool = None
+    # ``arena``/``tlregion`` kinds only: which backend serves arena spills —
+    # "hwsw" (scan-based reference) or "pallas" (the fused kernel under the
+    # existing 3-way refill switch). Bitwise-identical either way (the
+    # kernel parity guarantee composes through the arena layer; pinned in
+    # tests/test_kind_conformance.py).
+    arena_inner: str = "hwsw"
 
     def __post_init__(self):
         heap._ensure_backends()
@@ -208,18 +221,18 @@ class SystemConfig:
 
     @property
     def access_fn(self):
-        if self.kind in ("hwsw", "pallas", "sanitizer"):
+        if self.kind in ("hwsw", "pallas", "sanitizer", "arena", "tlregion"):
             return functools.partial(buddy_cache_access, self.bc)
         return functools.partial(sw_buffer_access, self.sw_buf)
 
     def cache_init(self):
-        if self.kind in ("hwsw", "pallas", "sanitizer"):
+        if self.kind in ("hwsw", "pallas", "sanitizer", "arena", "tlregion"):
             return buddy_cache_init(self.bc)
         return sw_buffer_init(self.sw_buf)
 
     @property
     def dma_bytes_per_miss(self) -> int:
-        if self.kind in ("hwsw", "pallas", "sanitizer"):
+        if self.kind in ("hwsw", "pallas", "sanitizer", "arena", "tlregion"):
             return buddy_cache.WORD_BYTES
         return self.sw_buf.line_bytes
 
@@ -271,6 +284,11 @@ class RoundInfo(NamedTuple):
 
 
 def system_init(cfg: SystemConfig, prepopulate: bool = True):
+    if cfg.kind in ("arena", "tlregion"):
+        # the layered frontend owns its region carve — freelists start empty
+        # and spill-refill on demand (see repro.core.arena.init_state)
+        from . import arena
+        return arena.init_state(cfg)
     if cfg.kind == "strawman":
         alloc = strawman_init(cfg.straw)
     else:
@@ -499,6 +517,33 @@ def _step_sanitizer(cfg: SystemConfig, st, req: AllocRequest):
     compilation footprint.
     """
     return _sanitizer_step_compiled(cfg, st, req)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _arena_step_compiled(cfg: SystemConfig, st, req: AllocRequest):
+    from . import arena
+
+    inner = _step_pallas if cfg.arena_inner == "pallas" else _step_pim
+    return arena.step(cfg, st, req, inner)
+
+
+@heap.register("arena")
+@heap.register("tlregion")
+def _step_arena(cfg: SystemConfig, st, req: AllocRequest):
+    """The layered design points: bump-pointer frontend over the pim stack.
+
+    A pure-jnp arena pass (`repro.core.arena`) serves small allocs by
+    bumping into a region carved out of the buddy heap at init, retires
+    whole epochs with OP_EPOCH_RESET, and forwards everything else — big
+    allocs, non-arena pointers, and spill-on-exhaustion — to the full
+    hwsw stack (`_step_pim`, or the fused kernel when
+    ``cfg.arena_inner == "pallas"``). ``arena`` shares one region (bump
+    adds serialize for cyc_bump_atomic each); ``tlregion`` gives each
+    thread its own region and per-thread resets — no cross-thread atomic
+    on the fast path. Jit-compiled as one unit for the same reason as the
+    sanitizer step.
+    """
+    return _arena_step_compiled(cfg, st, req)
 
 
 @heap.register("pallas")

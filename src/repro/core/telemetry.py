@@ -79,12 +79,21 @@ def free_bytes_from_histogram(bcfg: BuddyConfig, hist) -> int:
 
 
 def frontend_cached_bytes(cfg, state) -> int:
-    """Bytes sitting free in the per-thread LIFO freelists (0 for strawman)."""
+    """Bytes parked in the frontend layer: free sub-blocks in the per-thread
+    LIFO freelists (0 for strawman), plus — for the ``arena``/``tlregion``
+    kinds — every arena-region byte not currently placed (unbumped space AND
+    retired holes: neither is live, neither is buddy-free, so conservation
+    requires the frontend to own them until the next epoch reset)."""
     if cfg.kind == "strawman":
         return 0
     counts = np.asarray(state.alloc.counts, np.int64)
     class_sizes = np.asarray(cfg.pm.size_classes, np.int64)
-    return int((counts * class_sizes[None, :]).sum())
+    cached = int((counts * class_sizes[None, :]).sum())
+    if cfg.kind in ("arena", "tlregion"):
+        from . import arena
+        cached += arena.arena_bytes(cfg) - int(
+            np.asarray(arena.arena_live_bytes(cfg, state.cls_map)))
+    return cached
 
 
 def snapshot(cfg, state) -> dict:

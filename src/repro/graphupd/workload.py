@@ -89,16 +89,35 @@ def static_update_cost_us(cfg: GraphConfig, dpu: cost_model.DPUCost = None):
 class DynamicGraph:
     """Array-of-linked-lists adjacency on a PIM-malloc heap (one core).
 
-    Every allocation round goes through one `api.Allocator`-style handle
+    Every allocation round goes through one `repro.core.api.HeapClient`
     (the unified heap protocol), so the whole workload — insertion AND
     deletion — is recordable as an `AllocRequest` tape: pass a
-    `repro.workloads.trace.RecordingAllocator` as ``alloc`` to capture it.
+    `repro.workloads.trace.RecordingAllocator` as ``client`` to capture it.
     """
 
-    def __init__(self, cfg: GraphConfig, kind: str = "sw", alloc=None):
+    def __init__(self, cfg: GraphConfig, kind: str = "sw", client=None,
+                 alloc=None):
+        """``alloc`` is the deprecated pre-PR-8 injection hook (bare
+        Allocator-style handles); it warns once per call and is adapted
+        via `HeapClient.wrap`. Pass ``client=`` instead."""
         self.cfg = cfg
-        self.alloc = alloc if alloc is not None else api.Allocator(
-            heap_bytes=cfg.heap_bytes, num_threads=cfg.num_threads, kind=kind)
+        if alloc is not None:
+            import warnings
+            warnings.warn(
+                "DynamicGraph(alloc=...) is deprecated: pass client="
+                "HeapClient (or any HeapClient subclass); bare handles are "
+                "adapted via HeapClient.wrap for now",
+                DeprecationWarning, stacklevel=2)
+            if client is not None:
+                raise TypeError("pass either client= or (deprecated) alloc=")
+            client = api.HeapClient.wrap(alloc)
+        if client is None:
+            client = api.Allocator(
+                heap_bytes=cfg.heap_bytes, num_threads=cfg.num_threads,
+                kind=kind)
+        self.client = client
+        # back-compat alias: pre-PR-9 callers read `g.alloc.last_info`
+        self.alloc = client
         self.sys_cfg = self.alloc.cfg
         self.head = jnp.full((cfg.n_nodes,), -1, jnp.int32)
         self.heap = jnp.zeros((cfg.heap_bytes // 4,), jnp.int32)

@@ -13,6 +13,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 
@@ -59,6 +60,71 @@ def bulk_refill(stacks, counts, sel, cls, rows, new_counts):
                        stacks)
     counts = jnp.where(pick_cls, new_counts[:, None], counts)
     return stacks, counts
+
+
+# ---------------------------------------------------------------------------
+# arena frontend primitives (the bump-pointer fast path fused ahead of the
+# buddy mutex phase — see repro.core.arena). Pure jnp so they trace inside
+# jitted/fused step bodies and stay visible to the pimcheck verifier passes.
+# ---------------------------------------------------------------------------
+def arena_bump_shared(bump, cand, gneed, limit: int):
+    """Shared-arena bump allocation: contenders serialize in thread order.
+
+    bump: int32[] granules consumed; cand: bool[T] attempts this round;
+    gneed: int32[T] granules wanted. A failed fit does NOT consume space —
+    a later, smaller request can still be served (hence the scan, which is
+    also the modeled serialization point of the shared atomic add).
+    Returns (new_bump, start_granule int32[T] (-1 on fail), served bool[T]).
+    """
+
+    def body(b, x):
+        want, need = x
+        fits = want & (b + need <= limit)
+        g0 = jnp.where(fits, b, jnp.int32(-1))
+        return b + jnp.where(fits, need, 0), (g0, fits)
+
+    bump, (g0, served) = lax.scan(body, bump, (cand, gneed))
+    return bump, g0, served
+
+
+def arena_bump_tl(bump, cand, gneed, region_gran: int):
+    """Per-thread-region bump allocation: fully vectorized, no cross-thread
+    serialization (the tlregion fast path). ``bump`` is int32[T], each entry
+    an offset inside thread t's private region of ``region_gran`` granules.
+    Returns (new_bump, absolute start granule int32[T] (-1 on fail), served).
+    """
+    T = bump.shape[0]
+    fits = cand & (bump + gneed <= region_gran)
+    base = jnp.arange(T, dtype=jnp.int32) * region_gran
+    g0 = jnp.where(fits, base + bump, jnp.int32(-1))
+    return bump + jnp.where(fits, gneed, 0), g0, fits
+
+
+def arena_mark(cls_map, g, cls, on):
+    """Record an arena placement: cls_map[g] = cls where ``on`` (scatter with
+    an out-of-bounds park slot for masked threads, drop-guarded)."""
+    n = cls_map.shape[0]
+    idx = jnp.where(on, jnp.clip(g, 0, n - 1), jnp.int32(n))
+    return cls_map.at[idx].set(jnp.where(on, cls, jnp.int32(-1)), mode="drop")
+
+
+def arena_hole(cls_map, g, on):
+    """Retire an arena block: cls_map[g] = -1 where ``on`` (bump space is
+    not reclaimed until the next epoch reset — holes stay holes)."""
+    n = cls_map.shape[0]
+    idx = jnp.where(on, jnp.clip(g, 0, n - 1), jnp.int32(n))
+    return cls_map.at[idx].set(jnp.int32(-1), mode="drop")
+
+
+def arena_region_reset(cls_map, class_sizes, region_mask):
+    """Bulk epoch reset over ``region_mask`` granules: clears every placement
+    in the region and returns (new_cls_map, freed_bytes) where freed_bytes
+    is the rounded occupancy being retired (the telemetry delta)."""
+    nc = class_sizes.shape[0]
+    live = region_mask & (cls_map >= 0)
+    freed = jnp.sum(jnp.where(
+        live, class_sizes[jnp.clip(cls_map, 0, nc - 1)], 0))
+    return jnp.where(region_mask, jnp.int32(-1), cls_map), freed
 
 
 def freelist_op_kernel(stacks, counts, op, cls, ptr_in, *, interpret: bool = False):

@@ -243,6 +243,12 @@ def protocol_round(op, size, ptr, longest, counts, stacks, block_cls,
     is_alloc = (op == 1) | (op == 4)          # OP_MALLOC | OP_CALLOC
     is_re = op == 3                           # OP_REALLOC
     is_free = op == 2                         # OP_FREE
+    # OP_EPOCH_RESET (5) intentionally matches none of the above: backends
+    # without an arena frontend answer a reset round as idle (path -1),
+    # exactly like `system._protocol_round`, so hwsw/pallas stay bitwise
+    # equal on tapes containing resets. The arena/tlregion wrapper consumes
+    # op 5 before forwarding, so the fused kernel only ever sees it on
+    # raw-backend replays of arena-managed tapes.
 
     # ---- realloc size-class analysis on the pre-round metadata ------------
     pvalid = (ptr >= 0) & (ptr < heap_bytes)

@@ -75,6 +75,22 @@ class SessionPlan:
         return int(self.slot.shape[0])
 
 
+def epoch_boundaries(rounds: int, epoch_rounds: int) -> np.ndarray:
+    """bool[rounds] mask of epoch-boundary rounds.
+
+    With ``epoch_rounds = E > 0`` every E-th round (r = E-1, 2E-1, ...) is
+    dedicated to ``OP_EPOCH_RESET``: the planner dispatches no traffic into
+    it and every epoch-managed (small) allocation made since the previous
+    boundary is invalid afterwards — the arena frontend reclaims them in
+    one bulk reset instead of one FREE per block. ``epoch_rounds <= 0``
+    disables epochs (all-False mask).
+    """
+    mask = np.zeros(rounds, bool)
+    if epoch_rounds > 0:
+        mask[epoch_rounds - 1::epoch_rounds] = True
+    return mask
+
+
 def pct(x, percentiles=PERCENTILES) -> dict:
     """{'p50_cyc': ..., ...} percentile dict (zeros for an empty sample)."""
     x = np.asarray(x)

@@ -44,7 +44,7 @@ def record_graph_churn(smoke: bool = True, kind: str = RECORD_KIND) -> Trace:
                            num_threads=16, heap_bytes=1 << 21, seed=3)
     rec = RecordingAllocator(heap_bytes=gcfg.heap_bytes,
                              num_threads=gcfg.num_threads, kind=kind)
-    g = DynamicGraph(gcfg, alloc=rec)
+    g = DynamicGraph(gcfg, client=rec)
     pre_s, pre_d, new_s, new_d = synth_edges(gcfg)
     T = gcfg.num_threads
     rng = np.random.default_rng(gcfg.seed)

@@ -159,13 +159,23 @@ def trace_lint(trace: Trace) -> list:
                  growing REALLOC) — the create can recycle the very block
                  the suspect free names, which is the same-round
                  pointer-race class the fuzzer excludes by construction.
+      epoch      no *small* ref may survive an EPOCH_RESET round: a
+                 pointer produced by a request within the size classes
+                 (``meta.max_size_class``, default 2048) may be
+                 arena-placed on the ``arena``/``tlregion`` kinds, and a
+                 reset — which applies at round *start* — invalidates it
+                 wholesale. A ref in or after a reset round to a small
+                 producer at or before it is therefore only well-formed on
+                 *some* backends, which breaks the one-tape-every-kind
+                 replay contract. Big bypass blocks live outside the arena
+                 on every kind and legitimately survive resets.
     """
     errs = []
     op, size, ref = trace.op, trace.size, trace.ptr_ref
     raw = trace.ptr_raw
     R, T = op.shape
     known = (heap.OP_NOOP, heap.OP_MALLOC, heap.OP_FREE, heap.OP_REALLOC,
-             heap.OP_CALLOC)
+             heap.OP_CALLOC, heap.OP_EPOCH_RESET)
     bad_op = ~np.isin(op, known)
     for r, t in zip(*np.nonzero(bad_op)):
         errs.append(f"[lint:ops] round {r} thread {t}: unknown op code "
@@ -198,6 +208,22 @@ def trace_lint(trace: Trace) -> list:
                         f"threads {ts} (raw pointer, no producing slot) race "
                         f"metadata-creating ops on threads {cs} — "
                         "same-round pointer race (modeled UB)")
+
+    any_reset = (op == heap.OP_EPOCH_RESET).any(axis=1)
+    if any_reset.any():
+        cum = np.cumsum(any_reset)   # resets in rounds [0..r]
+        max_class = int(trace.meta.get("max_size_class", 2048))
+        for r, t in zip(*np.nonzero(has_ref & ~bad_ref)):
+            s = int(ref[r, t])
+            rs, ts = divmod(s, T)
+            psize = int(size[rs, ts])
+            # resets in (rs, r]: the producer's own round does not count
+            # (a reset applies at round start, before that round's allocs)
+            if 0 < psize <= max_class and cum[r] - cum[rs] > 0:
+                errs.append(
+                    f"[lint:epoch] round {r} thread {t}: ref to slot {s} "
+                    f"({psize} B, produced round {rs}) crosses an epoch "
+                    "reset — arena-managed pointers do not survive a reset")
     return errs
 
 
@@ -217,6 +243,8 @@ class RecordingAllocator(api.Allocator):
         super().__init__(*args, **kwargs)
         self._rounds = []          # (op, size, ptr_ref, ptr_raw) np[T]
         self._ptr_slot = {}        # live concrete ptr -> producing slot id
+        self._ptr_small = {}       # live concrete ptr -> within size classes
+        self._max_class = max(self.cfg.pm.size_classes)
 
     @property
     def recorded_rounds(self) -> int:
@@ -229,6 +257,15 @@ class RecordingAllocator(api.Allocator):
         if op.ndim != 1:
             raise ValueError("RecordingAllocator records single-core [T] "
                              f"rounds, got shape {op.shape}")
+        # an EPOCH_RESET applies at round start: every small (possibly
+        # arena-placed) pointer is retired from the map NOW, so a later op
+        # through one records ptr_ref = -1 (raw misuse, replayed verbatim)
+        # instead of a lint:epoch-violating cross-reset ref
+        if np.any(op == heap.OP_EPOCH_RESET):
+            for p in [p for p, sm in self._ptr_small.items() if sm]:
+                self._ptr_slot.pop(p, None)
+                self._ptr_small.pop(p, None)
+
         ptr_ref = np.full_like(ptr, -1)
         for t in range(op.shape[0]):
             if op[t] in (heap.OP_FREE, heap.OP_REALLOC) and ptr[t] >= 0:
@@ -242,17 +279,23 @@ class RecordingAllocator(api.Allocator):
         rok = np.asarray(resp.ok, bool)
         rmoved = np.asarray(resp.moved, bool)
         for t in range(T):
+            small = 0 < size[t] <= self._max_class
             if op[t] == heap.OP_FREE and rok[t]:
                 self._ptr_slot.pop(int(ptr[t]), None)
+                self._ptr_small.pop(int(ptr[t]), None)
             elif op[t] in (heap.OP_MALLOC, heap.OP_CALLOC) and rptr[t] >= 0:
                 self._ptr_slot[int(rptr[t])] = r * T + t
+                self._ptr_small[int(rptr[t])] = small
             elif op[t] == heap.OP_REALLOC:
                 if size[t] <= 0 and ptr[t] >= 0 and rok[t]:
                     self._ptr_slot.pop(int(ptr[t]), None)   # realloc(p, 0)
+                    self._ptr_small.pop(int(ptr[t]), None)
                 elif rptr[t] >= 0:
                     if rmoved[t]:
                         self._ptr_slot.pop(int(ptr[t]), None)
+                        self._ptr_small.pop(int(ptr[t]), None)
                     self._ptr_slot[int(rptr[t])] = r * T + t
+                    self._ptr_small[int(rptr[t])] = small
         self._rounds.append((op, size, ptr_ref, ptr))
         return resp
 
@@ -266,11 +309,13 @@ class RecordingAllocator(api.Allocator):
         only to capture a deliberately broken tape for testing."""
         op, size, ptr_ref, ptr_raw = (np.stack(x) for x in
                                       zip(*self._rounds))
+        meta = dict(meta or {})
+        meta.setdefault("max_size_class", self._max_class)
         trace = Trace(name=name, heap_bytes=self.cfg.heap_bytes,
                       num_threads=self.cfg.num_threads,
                       recorded_kind=self.cfg.kind, description=description,
                       op=op, size=size, ptr_ref=ptr_ref, ptr_raw=ptr_raw,
-                      meta=meta or {})
+                      meta=meta)
         if lint:
             errs = trace_lint(trace)
             if errs:

@@ -40,6 +40,25 @@ def test_tier1_matrix_has_decode_smoke_lane():
     assert "examples/serve_decode.py --smoke" in lanes["decode-smoke"]
 
 
+def test_tier1_fuzz_smoke_lane_runs_kind_conformance():
+    """Acceptance: the registry-generic conformance suite (which enrolls
+    arena/tlregion in conservation, C-edges, digest-stability, and
+    arena-inner parity) rides the fuzz-smoke lane on every PR."""
+    job = _load("ci.yml")["jobs"]["tier1"]
+    lanes = {e["suite"]: e["run"]
+             for e in job["strategy"]["matrix"]["include"]}
+    assert "tests/test_kind_conformance.py" in lanes["fuzz-smoke"]
+
+
+def test_analysis_lane_has_region_frontend_pimcheck_cell():
+    """Acceptance: arena+tlregion are pimcheck-traced at every deployment
+    tier as an explicit CI cell (and with zero suppressions — the
+    SUPPRESSIONS list ships empty, pinned by tests/test_analysis.py)."""
+    text = _run_text(_load("ci.yml")["jobs"]["analysis"])
+    assert "--kinds arena,tlregion" in text
+    assert "--tiers single,vmap,sharded" in text
+
+
 def test_bench_smoke_job_runs_wall_lane_and_both_gates():
     """Acceptance: the bench-wall step runs the wall-clock lane, the wall
     gate is exercised (not skipped) with --lane wall, and the JSON rides

@@ -48,7 +48,7 @@ import pytest
 
 from conftest import hypothesis_or_skip
 from repro.core import heap, system as sysm, telemetry
-from repro.core.oracle import PyPimMalloc
+from repro.core.oracle import PyArena, PyPimMalloc
 from repro.workloads.replay import replay, replay_all_kinds
 from repro.workloads.trace import Trace
 
@@ -342,6 +342,65 @@ def run_oracle_differential(seed: int, rounds: int = 36):
 @pytest.mark.parametrize("seed", (0, 5))
 def test_fuzz_oracle_differential(seed):
     run_oracle_differential(seed)
+
+
+# --------------------------------------------------------------------------
+# differential oracle: arena/tlregion vs plain-Python PyArena, round by round
+# --------------------------------------------------------------------------
+def run_arena_oracle_differential(kind: str, seed: int, rounds: int = 30):
+    """Closed-loop mixed-op stream (incl. EPOCH_RESET rounds and frees of
+    reset-staled pointers) through the layered arena kinds vs the `PyArena`
+    oracle: semantic fields equal and conservation holds after EVERY round.
+    Stale frees are deliberately kept in the stream — both sides must agree
+    on dropping them (the reset applies at round start)."""
+    cfg = sysm.SystemConfig(kind=kind, heap_bytes=HEAP, num_threads=T)
+    state = heap.init(cfg)
+    step = heap.REGISTRY[kind]
+    py = PyArena(heap_bytes=HEAP, num_threads=T,
+                 tlregion=(kind == "tlregion"))
+    rng = np.random.default_rng(seed)
+    live = []
+    for r in range(rounds):
+        op = np.zeros(T, np.int32)
+        size = np.zeros(T, np.int32)
+        ptr = np.full(T, -1, np.int32)
+        if r % 9 == 8:
+            op[rng.random(T) < 0.6] = heap.OP_EPOCH_RESET
+            # `live` is NOT cleared: later frees of staled arena pointers
+            # must drop identically on both sides
+        else:
+            for t in range(T):
+                u = rng.random()
+                if u < 0.45 or not live:
+                    op[t] = int(rng.choice((heap.OP_MALLOC, heap.OP_CALLOC)))
+                    size[t] = int(rng.choice(ALLOC_SIZES[2:]))
+                elif u < 0.70:
+                    op[t] = heap.OP_FREE
+                    if live:
+                        ptr[t] = live.pop(int(rng.integers(len(live))))
+                else:
+                    op[t] = heap.OP_REALLOC
+                    size[t] = int(rng.choice((0,) + REALLOC_SIZES + (8192,)))
+                    if live and rng.random() < 0.8:
+                        ptr[t] = live.pop(int(rng.integers(len(live))))
+        req = heap.AllocRequest(op=jnp.asarray(op), size=jnp.asarray(size),
+                                ptr=jnp.asarray(ptr))
+        state, resp = step(cfg, state, req)
+        want = py.request(op.tolist(), size.tolist(), ptr.tolist())
+        for f in ("ptr", "ok", "path", "moved"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(resp, f)), want[f],
+                err_msg=f"{kind} round {r}: {f}")
+        live += [int(p) for p in np.asarray(resp.ptr) if p >= 0]
+        snap = telemetry.snapshot(cfg, state)
+        assert snap["conservation_residual"] == 0, \
+            f"{kind} round {r}: residual {snap['conservation_residual']}"
+
+
+@pytest.mark.parametrize("kind", ("arena", "tlregion"))
+@pytest.mark.parametrize("seed", (0, 3))
+def test_fuzz_arena_oracle_differential(kind, seed):
+    run_arena_oracle_differential(kind, seed)
 
 
 # --------------------------------------------------------------------------

@@ -269,6 +269,65 @@ def test_serve_mesh_and_vmap_paths_agree():
                                       np.asarray(getattr(rb, f)))
 
 
+def test_serve_epoch_mode_contract():
+    """``epoch_rounds`` mode: boundary rounds dedicate the whole grid to
+    OP_EPOCH_RESET (no traffic dispatches), small allocations become
+    round-scoped Temp blocks (no expiry frees — every dispatched FREE
+    targets a big bypass block), conservation holds on the arena fleet,
+    and the report carries the epoch ledger."""
+    cfg = sysm.SystemConfig(kind="arena", heap_bytes=1 << 20, num_threads=T)
+    tc = _tc(rounds=24, arrival_rate=10.0, epoch_rounds=6)
+    eng = FleetServe(cfg, 2, 2, traffic=tc, placement="round_robin")
+    plan, rep = eng.serve()
+    boundary = np.arange(24) % 6 == 5
+    assert (plan.op[boundary] == heap.OP_EPOCH_RESET).all()
+    assert plan.dispatched_per_round[boundary].sum() == 0
+    assert (plan.op[~boundary] != heap.OP_EPOCH_RESET).all()
+    assert rep["epoch_rounds"] == 6 and rep["epoch_resets"] == 4
+    assert rep["epoch_managed_allocs"] > 0
+    assert rep["conservation_residual"] == 0
+    assert rep["failed_allocs"] == 0
+    assert rep["us_per_call"] > 0
+    # every dispatched FREE targets a big block: Temp allocations are
+    # reclaimed only by the resets
+    cap = eng.capacity
+    opf = plan.op.reshape(24, -1)
+    sizef = plan.size.reshape(24, -1)
+    reff = plan.ptr_ref.reshape(24, -1)
+    frees = list(zip(*np.nonzero(opf == heap.OP_FREE)))
+    for r, s in frees:
+        rs, gs = divmod(int(reff[r, s]), cap)
+        assert sizef[rs, gs] > tc.epoch_max_class
+
+
+def test_serve_epoch_trace_lints_and_replays():
+    """An epoch session's per-core tape passes trace_lint (no small ref
+    crosses a reset round) and replays bitwise on the recording kind."""
+    from repro.workloads.trace import trace_lint
+
+    cfg = sysm.SystemConfig(kind="tlregion", heap_bytes=1 << 20,
+                            num_threads=T)
+    tc = _tc(rounds=18, arrival_rate=8.0, epoch_rounds=5)
+    eng = FleetServe(cfg, 1, 2, traffic=tc, placement="round_robin")
+    plan = eng.plan()
+    _, resps = eng.run(plan)
+    checked = 0
+    for ck in range(2):
+        tr = eng.trace(plan, 0, ck)
+        assert tr.meta["epoch_rounds"] == 5
+        assert tr.meta["max_size_class"] == tc.epoch_max_class
+        assert trace_lint(tr) == []
+        if tr.ops == 0:
+            continue
+        r2, _, _ = replay(tr, "tlregion")
+        for f in ("ptr", "ok", "path", "latency_cyc"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(resps, f))[:, 0, ck, :],
+                np.asarray(getattr(r2, f)), err_msg=f"{ck}:{f}")
+        checked += 1
+    assert checked >= 1
+
+
 def test_serve_least_loaded_spreads_ranks():
     """least_loaded keeps every rank busy where chunked may concentrate."""
     tc = _tc(rounds=24, arrival_rate=12.0, num_tenants=12)

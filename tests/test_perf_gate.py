@@ -257,6 +257,19 @@ def test_lane_filter_restricts_gate(tmp_path):
     assert perf_gate.run_gate(mod_only, b, 0.20, 0.05, lane="modeled") == 0
 
 
+def test_delta_table_groups_by_lane_with_subtotals(tmp_path, capsys):
+    """The delta table renders the modeled group first, then wall, each
+    closed by a subtotal row (summed us, aggregate delta, verdict counts)."""
+    b = _write(tmp_path, "base.json", _wall_doc(BASE, WALL))
+    c = _write(tmp_path, "cur.json", _wall_doc(BASE, WALL))
+    assert perf_gate.run_gate(c, b, 0.20, 0.05) == 0
+    out = capsys.readouterr().out
+    assert "**modeled lane**" in out and "**wall lane**" in out
+    assert "_modeled subtotal" in out and "_wall subtotal" in out
+    assert out.index("**modeled lane**") < out.index("**wall lane**")
+    assert "ok=3" in out          # three tracked modeled rows all ok
+
+
 def test_custom_wall_threshold_cli(tmp_path):
     """--fail-over-wall from the CLI overrides the default wall threshold."""
     wall_cur = {n: v * 1.4 for n, v in WALL.items()}

@@ -215,6 +215,7 @@ def test_report_schema():
     rep = sanitizer.report(st)
     assert set(rep) == {"double_free", "use_after_free",
                         "realloc_after_free", "wild_ops", "quarantined",
-                        "evicted", "last_round_tags", "quarantine_backlog"}
+                        "evicted", "epoch_resets", "epoch_stale",
+                        "last_round_tags", "quarantine_backlog"}
     assert rep["last_round_tags"] == ["none"] * T
     assert rep["quarantine_backlog"] == 1

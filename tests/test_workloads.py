@@ -57,7 +57,10 @@ def test_trace_json_roundtrip(tmp_path):
     p = str(tmp_path / "t.json")
     trace.save(p)
     back = Trace.load(p)
-    assert back.name == trace.name and back.meta == {"x": 1}
+    # finish() stamps max_size_class so trace_lint's epoch rule knows the
+    # small/big boundary without the recording config
+    assert back.name == trace.name
+    assert back.meta == {"x": 1, "max_size_class": 2048}
     for f in ("op", "size", "ptr_ref", "ptr_raw"):
         np.testing.assert_array_equal(getattr(back, f), getattr(trace, f))
 
@@ -189,6 +192,43 @@ def test_kv_paged_pool_deprecated_alloc_hook_warns_but_works():
 
     with pytest.raises(TypeError):
         HeapClient.wrap(object())
+
+
+def test_deprecated_alloc_hooks_warn_exactly_once():
+    """One deprecated ``alloc=`` construction emits exactly ONE
+    DeprecationWarning — no duplicates from the wrap/adapter layers — for
+    both remaining carriers of the hook (PagePool and DynamicGraph)."""
+    import warnings
+
+    from repro.core.api import HeapClient
+    from repro.graphupd.workload import DynamicGraph, GraphConfig
+    from repro.kvcache.paged import PAGE_UNIT, PagePool
+
+    client = HeapClient(heap_bytes=(1 << 16) * PAGE_UNIT, num_threads=8,
+                        kind="sw")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        PagePool(n_pages=1 << 16, num_threads=8, alloc=client)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in dep]
+
+    gcfg = GraphConfig(n_nodes=8, n_edges_pre=0, n_edges_new=0,
+                       num_threads=4, heap_bytes=1 << 19)
+    gclient = HeapClient(heap_bytes=gcfg.heap_bytes, num_threads=4,
+                         kind="sw")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        g = DynamicGraph(gcfg, alloc=gclient)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(x.message) for x in dep]
+    assert g.client is gclient
+
+    # the supported client= path is warning-free
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        DynamicGraph(gcfg, client=gclient)
+        PagePool(n_pages=1 << 16, num_threads=8, client=client)
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
 
 
 def test_graph_insert_delete_matches_reference():
