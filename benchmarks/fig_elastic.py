@@ -1,0 +1,106 @@
+"""fig_elastic: heap-pressure tenant migration under a hot-rank storm.
+
+One skewed-Zipf arrival stream (zipf_a = 2.2: one dominant tenant) homed
+with ``chunked`` placement, which concentrates the hot tenants on rank 0 —
+the non-stationary worst case the elastic tier exists for. The same
+session is served twice:
+
+  * **migration_off** — plain segmented serving; the hot core saturates,
+    its admission queue drops arrivals, and queue wait dominates p99.
+  * **migration_on** — `ElasticFleetServe` with the ``hottest_tenant``
+    policy at ``interval`` drain points: when per-rank HWMs diverge past
+    the ratio, the biggest tenants on the hot rank are drained (FREE on
+    the source core) and replayed (MALLOC on the destination) onto the
+    least-loaded rank, and their traffic follows.
+
+Rows are modeled (deterministic functions of the cost model) so the perf
+gate tracks them. The module **raises** — an errored figure, which the
+gate hard-fails — if migration stops improving the storm: the ON arm must
+beat OFF on e2e p99 AND drop no more arrivals. Conservation and the
+never-droppable expiry lane are asserted on both arms.
+
+Sessions are smoke-sized (the storm is the committed row), so ``--smoke``
+and full runs measure identical rows — the fig_arena policy.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import system as sysm
+from repro.launch.elastic import ElasticFleetServe, MigrationConfig
+from repro.launch.serve_fleet import TrafficConfig
+
+from .common import emit
+
+STORM = dict(R=2, C=2, T=8, heap=1 << 20, kind="hwsw", rounds=64,
+             rate=14.0, tenants=8, zipf_a=2.2, queue_cap=24,
+             max_lifetime=24, seed=9)
+MIG = dict(ratio=1.3, min_bytes=1 << 11, policy="hottest_tenant",
+           drain="interval", check_rounds=8, max_moves=2)
+
+
+def _storm(migration):
+    cfg = sysm.SystemConfig(kind=STORM["kind"], heap_bytes=STORM["heap"],
+                            num_threads=STORM["T"])
+    tc = TrafficConfig(seed=STORM["seed"], rounds=STORM["rounds"],
+                       arrival_rate=STORM["rate"],
+                       num_tenants=STORM["tenants"],
+                       zipf_a=STORM["zipf_a"],
+                       queue_cap=STORM["queue_cap"],
+                       max_lifetime=STORM["max_lifetime"])
+    eng = ElasticFleetServe(cfg, STORM["R"], STORM["C"], traffic=tc,
+                            placement="chunked", migration=migration)
+    _, rep = eng.serve()
+    return rep
+
+
+def bench(smoke: bool = False):
+    recs = []
+    reps = {}
+    for name, migration in (("migration_off", None),
+                            ("migration_on", MigrationConfig(**MIG))):
+        t0 = time.time()
+        rep = _storm(migration)
+        assert rep["conservation_residual"] == 0, name
+        assert rep["dropped_frees"] == 0, name
+        reps[name] = rep
+        recs.append(emit(
+            f"fig_elastic/storm/{name}", rep["us_per_call"],
+            f"p99={rep['e2e_p99_cyc']:.0f}cyc;drops={rep['dropped']};"
+            f"disp={rep['dispatched']};migs={len(rep['migrations'])}",
+            backend=STORM["kind"],
+            e2e_p99_cyc=rep["e2e_p99_cyc"],
+            e2e_p50_cyc=rep["e2e_p50_cyc"],
+            dropped=rep["dropped"],
+            drop_rate=rep["drop_rate"],
+            dispatched=rep["dispatched"],
+            backlog_end=rep["backlog_end"],
+            migrations=len(rep["migrations"]),
+            migration_ops_dispatched=rep["migration_ops_dispatched"],
+            wall_s=time.time() - t0))
+
+    off, on = reps["migration_off"], reps["migration_on"]
+    if not on["migrations"]:
+        raise RuntimeError("elastic storm no longer triggers migration — "
+                           "the ON arm measured nothing")
+    if on["e2e_p99_cyc"] >= off["e2e_p99_cyc"]:
+        raise RuntimeError(
+            f"migration regression: ON p99 {on['e2e_p99_cyc']:.0f}cyc no "
+            f"longer beats OFF {off['e2e_p99_cyc']:.0f}cyc under the storm")
+    if on["dropped"] > off["dropped"]:
+        raise RuntimeError(
+            f"migration regression: ON drops {on['dropped']} arrivals > "
+            f"OFF {off['dropped']} under the storm")
+    recs.append(emit(
+        "fig_elastic/storm/claim_migration_win", 0.0,
+        f"p99={off['e2e_p99_cyc'] / on['e2e_p99_cyc']:.2f}x better; "
+        f"drops {off['dropped']}->{on['dropped']}; "
+        f"dispatched {off['dispatched']}->{on['dispatched']}",
+        p99_improvement=off["e2e_p99_cyc"] / on["e2e_p99_cyc"],
+        drops_avoided=off["dropped"] - on["dropped"],
+        extra_dispatched=on["dispatched"] - off["dispatched"]))
+    return recs
+
+
+def run():
+    bench()

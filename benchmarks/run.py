@@ -25,7 +25,7 @@ import time
 
 ALL = ("fig5", "fig6", "fig7", "fig14", "fig14_wall", "fig15", "fig16",
        "fig_fleet", "fleet_serve", "fig_decode", "workloads", "fig_arena",
-       "roofline")
+       "fig_elastic", "roofline")
 SCHEMA = "pim-malloc-bench/v1"
 # per-record attribution stamps (the only non-numeric record fields besides
 # name/derived): allocator design point, jax version, and for wall-clock
@@ -45,6 +45,7 @@ _MODULES = {
     "fig_decode": "fig_decode",
     "workloads": "fig_workloads",
     "fig_arena": "fig_arena",
+    "fig_elastic": "fig_elastic",
     "roofline": "roofline",
 }
 

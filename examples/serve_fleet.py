@@ -3,7 +3,7 @@
     PYTHONPATH=src python examples/serve_fleet.py \
         [--ranks 2] [--cores 2] [--threads 4] [--rounds 48] [--rate 12] \
         [--placement round_robin|least_loaded|chunked] [--kind sw] \
-        [--seed 0] [--queue-cap 64] [--export-trace PATH]
+        [--seed 0] [--queue-cap 64] [--export-trace PATH] [--chaos]
 
 Plans a Poisson/Zipf tenant session, drives it through the donated
 `lax.scan` round driver, and prints the serving report: admission /
@@ -11,10 +11,17 @@ backpressure counters, end-to-end latency percentiles in modeled DPU
 cycles, queue-depth trace, and the fleet cost accounting. ``--export-trace``
 writes rank 0 / core 0's slice as a ``pim-malloc-trace/v1`` tape replayable
 with ``python -m repro.workloads.replay``.
+
+``--chaos`` serves the same session through `ElasticFleetServe` instead:
+a seed-derived `FaultPlan` (core kill, one-round stall, dropped round)
+plus heap-pressure tenant migration, with the extra elastic counters
+(migrations, kills, pressure checks) appended to the report. The chaos
+session still pins dropped_frees == 0 and conservation_residual == 0.
 """
 import argparse
 
 from repro.core import system as sysm
+from repro.launch.elastic import ElasticFleetServe, FaultPlan, MigrationConfig
 from repro.launch.serve_fleet import FleetServe, TrafficConfig
 
 
@@ -34,6 +41,9 @@ def main():
     ap.add_argument("--queue-cap", type=int, default=64)
     ap.add_argument("--tenants", type=int, default=16)
     ap.add_argument("--export-trace", default=None, metavar="PATH")
+    ap.add_argument("--chaos", action="store_true",
+                    help="elastic session: seed-derived fault plan + "
+                         "heap-pressure tenant migration")
     args = ap.parse_args()
 
     cfg = sysm.SystemConfig(kind=args.kind, heap_bytes=1 << 19,
@@ -41,8 +51,18 @@ def main():
     traffic = TrafficConfig(seed=args.seed, rounds=args.rounds,
                             arrival_rate=args.rate, num_tenants=args.tenants,
                             queue_cap=args.queue_cap)
-    engine = FleetServe(cfg, args.ranks, args.cores, traffic=traffic,
-                        placement=args.placement)
+    if args.chaos:
+        faults = FaultPlan.generate(seed=args.seed + 1, rounds=args.rounds,
+                                    shape=(args.ranks, args.cores,
+                                           args.threads))
+        engine = ElasticFleetServe(
+            cfg, args.ranks, args.cores, traffic=traffic,
+            placement=args.placement, faults=faults,
+            migration=MigrationConfig(ratio=1.3, min_bytes=1 << 10,
+                                      drain="interval", check_rounds=8))
+    else:
+        engine = FleetServe(cfg, args.ranks, args.cores, traffic=traffic,
+                            placement=args.placement)
     plan, rep = engine.serve()
 
     R, C, T = plan.shape
@@ -65,6 +85,19 @@ def main():
           f"{rep['failed_allocs']} dropped_frees={rep['dropped_frees']} "
           f"conservation_residual={rep['conservation_residual']}")
     print("per-rank ops:", rep["accounting"]["per_rank"]["ops"])
+    if args.chaos:
+        faults = ", ".join(f"r{ev['round']} {ev['kind']}"
+                           + (f"@({ev['rank']},{ev['core']})"
+                              if ev["kind"] != "drop" else "")
+                           for ev in rep["faults"]) or "none"
+        print(f"chaos: faults=[{faults}] kills={len(rep['kills'])} "
+              f"migrations={len(rep['migrations'])} "
+              f"(+{rep['migration_ops_dispatched']} migration ops) "
+              f"killed_cores={rep['killed_cores']}")
+        for ev in rep["migrations"]:
+            src = tuple(ev["src"]) if ev["src"] else "?"
+            print(f"  round {ev['round']:4d} migrate tenant {ev['tenant']} "
+                  f"{src} -> {tuple(ev['dst'])} ({ev['bytes']}B live)")
     depths = rep["queue_depth"]
     peak = max(max(depths), 1)
     for r0 in range(0, len(depths), max(len(depths) // 12, 1)):

@@ -61,7 +61,9 @@ class AsyncCheckpointer:
         self._lock = threading.Lock()
 
     def save(self, tree, step: int):
-        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        # np.array, not np.asarray: asarray is a no-copy view of host
+        # arrays, and the caller may mutate them before the worker writes
+        host_tree = jax.tree.map(lambda x: np.array(x), tree)
         with self._lock:
             self._futures.append(
                 self._pool.submit(save, host_tree, step, self.ckpt_dir))
@@ -95,10 +97,20 @@ def restore(tree_like, step: int, ckpt_dir: str, shardings=None):
     for key, leaf in named.items():
         arr = data[key]
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            # dtype drift between writer and restorer: cast, but refuse a
+            # lossy cast — a silently-truncated heap pointer is corruption
+            cast = arr.astype(want)
+            if not np.array_equal(cast.astype(arr.dtype), arr):
+                raise ValueError(
+                    f"lossy dtype cast restoring {key!r}: saved "
+                    f"{arr.dtype} -> wanted {want}")
+            arr = cast
         if flat_sh is not None:
             out[key] = jax.device_put(arr, flat_sh[key])
         else:
-            out[key] = jax.numpy.asarray(arr, dtype=leaf.dtype)
+            out[key] = jax.numpy.asarray(arr)
     # rebuild tree
     paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []

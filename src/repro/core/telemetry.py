@@ -96,6 +96,56 @@ def frontend_cached_bytes(cfg, state) -> int:
     return cached
 
 
+def fleet_pressure(state) -> dict:
+    """Per-rank heap-pressure signal from a fleet state's telemetry.
+
+    ``state.telem`` carries per-core live/high-water counters with leading
+    [R, C] axes (the fleet transform stack vmaps the per-core state).
+    Returns host-side arrays: ``live`` / ``hwm`` as [R, C] int64 plus the
+    per-rank maxima (the hottest core per rank is the signal that matters —
+    one overloaded heap stalls its whole rank's round barrier).
+    """
+    live = np.asarray(state.telem.live_bytes, np.int64)
+    hwm = np.asarray(state.telem.hwm_bytes, np.int64)
+    if live.ndim != 2:
+        raise ValueError(f"fleet_pressure wants [R, C] telemetry, "
+                         f"got shape {live.shape}")
+    return {
+        "live": live,
+        "hwm": hwm,
+        "rank_live": live.max(axis=1),
+        "rank_hwm": hwm.max(axis=1),
+    }
+
+
+def hwm_divergence(rank_hwm, ratio: float = 2.0, min_bytes: int = 1) -> dict:
+    """Decide whether per-rank high-water marks have diverged.
+
+    ``trigger`` is True when the hottest rank's HWM exceeds the coldest
+    rank's by more than ``ratio`` AND the hottest HWM is at least
+    ``min_bytes`` (a floor so an idle fleet, where the coldest rank may
+    still be at 0, does not divide-by-zero its way into migrating nothing).
+    The coldest rank is compared at ``max(coldest, min_bytes)``, so the
+    threshold is exactly ``hottest > ratio * max(coldest, min_bytes)``.
+    Pure and host-side — pinned by tests/test_elastic_fleet.py.
+    """
+    h = np.asarray(rank_hwm, np.int64).reshape(-1)
+    if h.shape[0] == 0:
+        raise ValueError("empty rank_hwm")
+    hot = int(np.argmax(h))
+    cold = int(np.argmin(h))
+    floor = max(int(h[cold]), int(min_bytes))
+    return {
+        "hottest_rank": hot,
+        "coldest_rank": cold,
+        "hottest_hwm": int(h[hot]),
+        "coldest_hwm": int(h[cold]),
+        "ratio": float(h[hot]) / float(floor),
+        "trigger": bool(h[hot] >= int(min_bytes)
+                        and float(h[hot]) > ratio * floor),
+    }
+
+
 def snapshot(cfg, state) -> dict:
     """One heap-health report from a (SystemConfig, SystemState) pair.
 

@@ -122,6 +122,84 @@ def tenant_core(policy: str, i: int, shape: tuple, loads=None,
 
 
 # ---------------------------------------------------------------------------
+# migration + drain policies (the elastic tier's declarative hooks)
+# ---------------------------------------------------------------------------
+# A migration policy answers "pressure diverged — which tenants move where":
+#     fn(pressure, homes, tenant_bytes, loads, shape, dead=frozenset(),
+#        max_moves=1) -> [(tenant, (rank, core)), ...]
+# with ``pressure`` a `repro.core.telemetry.hwm_divergence` dict, ``homes``
+# the planner's {tenant: (rank, core)}, ``tenant_bytes`` {tenant: tracked
+# live bytes}, ``loads`` the [R, C] live-bytes signal, and ``dead`` the
+# killed cores. A drain policy answers "at which rounds may the fleet pause
+# to decide": fn(traffic, check_rounds) -> sorted round list. Registering a
+# new entry in MIGRATIONS / DRAINS is the whole integration — the elastic
+# engine (`repro.launch.elastic`) looks policies up by name, mirroring
+# PLACEMENTS.
+
+
+def migrate_hottest_tenant(pressure, homes, tenant_bytes, loads, shape,
+                           dead=frozenset(), max_moves: int = 1):
+    """Move the biggest tenant(s) homed on the hottest rank to the
+    least-loaded live core off that rank; ties break by tenant id."""
+    R, C, T = shape
+    hot = pressure["hottest_rank"]
+    victims = sorted((k for k, (rk, _) in homes.items() if rk == hot),
+                     key=lambda k: (-tenant_bytes.get(k, 0), k))
+    masked = np.asarray(loads, np.float64).copy()
+    masked[hot, :] = np.inf
+    for d in dead:
+        masked[d] = np.inf
+    moves = []
+    for k in victims[:max_moves]:
+        if not np.isfinite(masked).any():
+            break
+        flat = int(np.argmin(masked.reshape(-1)))
+        dst = (flat // C, flat % C)
+        masked[dst] += tenant_bytes.get(k, 0)
+        moves.append((k, dst))
+    return moves
+
+
+def migrate_none(pressure, homes, tenant_bytes, loads, shape,
+                 dead=frozenset(), max_moves: int = 1):
+    """Baseline: never move anything (the migration-off bench arm)."""
+    return []
+
+
+MIGRATIONS = {
+    "hottest_tenant": migrate_hottest_tenant,
+    "none": migrate_none,
+}
+
+
+def drain_epoch(traffic, check_rounds: int):
+    """Decide only at epoch boundaries — the free drain point: Temp blocks
+    die at the reset, so a migrating tenant drags no Temp state along.
+    Falls back to no drain points when the traffic has no epoch mode."""
+    E = traffic.epoch_rounds
+    if not E:
+        return []
+    return list(range(E, traffic.rounds, E))
+
+
+def drain_interval(traffic, check_rounds: int):
+    """Decide every ``check_rounds`` rounds regardless of epoch mode."""
+    step = max(1, int(check_rounds))
+    return list(range(step, traffic.rounds, step))
+
+
+def drain_never(traffic, check_rounds: int):
+    return []
+
+
+DRAINS = {
+    "epoch": drain_epoch,
+    "interval": drain_interval,
+    "none": drain_never,
+}
+
+
+# ---------------------------------------------------------------------------
 # scatter / gather
 # ---------------------------------------------------------------------------
 def scatter_slots(op, size, ptr, shape: tuple, slots) -> AllocRequest:

@@ -174,6 +174,11 @@ class ScanEngine:
         inner, self.mesh = heap_api.sharded_inner(cfg, num_ranks, mesh=mesh)
         self._inner = inner
         self._scan = jax.jit(self._scan_fn, donate_argnums=(0,))
+        # segmented driver (elastic tier): same round body, but the slot
+        # file and the round offset are carried across calls so a session
+        # can be executed in pieces with host-side decisions in between —
+        # bitwise-identical to one uninterrupted scan (same per-round math)
+        self._segment = jax.jit(self._segment_fn, donate_argnums=(0, 1))
 
     @property
     def shape(self) -> tuple:
@@ -184,12 +189,7 @@ class ScanEngine:
         R, C, T = self.shape
         return R * C * T
 
-    def _scan_fn(self, state, op, size, ptr_ref, ptr_raw):
-        rounds = op.shape[0]
-        cap = self.capacity
-        n_slots = rounds * cap
-        slots0 = jnp.full((n_slots,), -1, jnp.int32)
-
+    def _round_body(self, n_slots: int, cap: int):
         def body(carry, x):
             st, slots = carry
             r, op_r, size_r, ref_r, raw_r = x
@@ -207,11 +207,44 @@ class ScanEngine:
                 (r * cap,))
             return (st, slots), resp
 
+        return body
+
+    def _scan_fn(self, state, op, size, ptr_ref, ptr_raw):
+        rounds = op.shape[0]
+        cap = self.capacity
+        n_slots = rounds * cap
+        slots0 = jnp.full((n_slots,), -1, jnp.int32)
         (state, _), resps = lax.scan(
-            body, (state, slots0),
+            self._round_body(n_slots, cap), (state, slots0),
             (jnp.arange(rounds, dtype=jnp.int32), op, size, ptr_ref,
              ptr_raw))
         return state, resps
+
+    def _segment_fn(self, state, slots, r0, op, size, ptr_ref, ptr_raw):
+        """Scan a contiguous slice [r0, r0+len) of a session.
+
+        ``slots`` is the full-session slot file (rounds * capacity), carried
+        across segments; ``r0`` the slice's first global round index. The
+        round body is exactly :meth:`_scan_fn`'s, so running a session as N
+        segments is bitwise-identical to one scan — the elastic tier's
+        snapshot/resume and fault-surgery points rely on this.
+        """
+        seg = op.shape[0]
+        cap = self.capacity
+        (state, slots), resps = lax.scan(
+            self._round_body(slots.shape[0], cap), (state, slots),
+            (r0 + jnp.arange(seg, dtype=jnp.int32), op, size, ptr_ref,
+             ptr_raw))
+        return state, slots, resps
+
+    def run_segment(self, state, slots, r0: int, plan):
+        """Execute rounds [r0, r1) of a planned session (r1 = r0 + segment
+        length implied by the sliced grids passed via ``plan`` tuple
+        ``(op, size, ptr_ref, ptr_raw)``); returns (state, slots, resps)."""
+        op, size, ptr_ref, ptr_raw = plan
+        return self._segment(
+            state, slots, jnp.int32(r0), jnp.asarray(op), jnp.asarray(size),
+            jnp.asarray(ptr_ref), jnp.asarray(ptr_raw))
 
     def run(self, plan):
         """Execute a planned session on a fresh fleet; returns the final

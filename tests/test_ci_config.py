@@ -40,6 +40,19 @@ def test_tier1_matrix_has_decode_smoke_lane():
     assert "examples/serve_decode.py --smoke" in lanes["decode-smoke"]
 
 
+def test_tier1_matrix_has_chaos_smoke_lane():
+    """Acceptance: the elastic-fleet chaos harness (fault injection,
+    heap-pressure migration, snapshot/restore) and the checkpoint
+    substrate suite ride tier-1 with a bounded seed sweep."""
+    job = _load("ci.yml")["jobs"]["tier1"]
+    lanes = {e["suite"]: e["run"]
+             for e in job["strategy"]["matrix"]["include"]}
+    assert "chaos-smoke" in lanes
+    assert "tests/test_elastic_fleet.py" in lanes["chaos-smoke"]
+    assert "tests/test_checkpoint.py" in lanes["chaos-smoke"]
+    assert "CHAOS_SEEDS=" in lanes["chaos-smoke"]
+
+
 def test_tier1_fuzz_smoke_lane_runs_kind_conformance():
     """Acceptance: the registry-generic conformance suite (which enrolls
     arena/tlregion in conservation, C-edges, digest-stability, and
@@ -88,6 +101,19 @@ def test_nightly_workflow_scheduled_and_dispatchable():
     assert "FUZZ_MAX_EXAMPLES=" in fuzz
     budget = int(fuzz.split("FUZZ_MAX_EXAMPLES=")[1].split()[0])
     assert budget > 15
+
+
+def test_nightly_chaos_sweep_deepens_the_smoke_lane():
+    """The nightly chaos sweep must rerun the elastic harness with a
+    strictly wider seed sweep than the per-PR chaos-smoke lane."""
+    tier1 = _load("ci.yml")["jobs"]["tier1"]
+    lanes = {e["suite"]: e["run"]
+             for e in tier1["strategy"]["matrix"]["include"]}
+    smoke = int(lanes["chaos-smoke"].split("CHAOS_SEEDS=")[1].split()[0])
+    sweep_text = _run_text(_load("nightly.yml")["jobs"]["chaos-sweep"])
+    assert "tests/test_elastic_fleet.py" in sweep_text
+    deep = int(sweep_text.split("CHAOS_SEEDS=")[1].split()[0])
+    assert deep > smoke
 
 
 def test_all_setup_python_steps_cache_pip():

@@ -1,0 +1,393 @@
+"""Chaos harness for the elastic serving tier (repro.launch.elastic).
+
+Seeded kill/stall/drop/migrate/snapshot schedules across backends, pinning
+the guarantees the tier sells:
+
+  * per-core conservation holds after every chaos session (residual 0),
+  * the expiry/eviction free lane records zero drops under every schedule
+    (kills requeue it through the replay path — never drop it),
+  * a migrated tenant's destination-core tape is a closed trace that
+    replays bitwise through `repro.workloads.replay`,
+  * the same traffic seed + the same FaultPlan reproduce the report and
+    tapes exactly,
+  * `snapshot()` mid-session → `restore()` (same mesh wiring AND onto a
+    shard_mapped mesh) finishes the session with a report bitwise-equal
+    to the uninterrupted run (crash-vs-clean equivalence),
+  * with no faults and no migration the elastic engine is bitwise-equal
+    to plain FleetServe (the segmented scan is the same session).
+
+`CHAOS_SEEDS` (env) widens the seeded sweep — CI smoke runs 2, the
+nightly lane more.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import system as sysm
+from repro.core import telemetry
+from repro.core.heap import OP_NOOP
+from repro.launch import fleet
+from repro.launch.elastic import (DROP, KILL, STALL, ElasticFleetServe,
+                                  FaultEvent, FaultPlan, MigrationConfig)
+from repro.launch.serve_fleet import FleetServe, TrafficConfig
+from repro.workloads.replay import replay
+
+T = 4
+SHAPE = (2, 2, T)
+HEAP = 1 << 17
+N_SEEDS = int(os.environ.get("CHAOS_SEEDS", "2"))
+KINDS = ("sw", "hwsw")
+CELLS = [(kind, seed) for kind in KINDS for seed in range(N_SEEDS)]
+
+
+def _cfg(kind="sw"):
+    return sysm.SystemConfig(kind=kind, heap_bytes=HEAP, num_threads=T)
+
+
+def _tc(**kw):
+    base = dict(seed=3, rounds=24, arrival_rate=6.0, num_tenants=8,
+                queue_cap=32)
+    base.update(kw)
+    return TrafficConfig(**base)
+
+
+def _mig(**kw):
+    base = dict(ratio=1.2, min_bytes=256, drain="interval", check_rounds=6)
+    base.update(kw)
+    return MigrationConfig(**base)
+
+
+def _chaos_engine(kind, seed, mesh=False):
+    tc = _tc(seed=3 + seed)
+    return ElasticFleetServe(
+        _cfg(kind), 2, 2, traffic=tc, placement="chunked", mesh=mesh,
+        faults=FaultPlan.generate(seed=100 + seed, rounds=tc.rounds,
+                                  shape=SHAPE),
+        migration=_mig())
+
+
+_CACHE = {}
+
+
+def _chaos_run(kind, seed):
+    """One chaos session per (kind, seed), cached with its engine so the
+    tape tests can reach the per-segment responses."""
+    if (kind, seed) not in _CACHE:
+        eng = _chaos_engine(kind, seed)
+        plan, report = eng.serve()
+        _CACHE[(kind, seed)] = (eng, plan, report)
+    return _CACHE[(kind, seed)]
+
+
+# --------------------------------------------------------------------------
+# the chaos matrix
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kind,seed", CELLS)
+def test_chaos_conservation_holds(kind, seed):
+    _, _, report = _chaos_run(kind, seed)
+    assert report["conservation_residual"] == 0
+
+
+@pytest.mark.parametrize("kind,seed", CELLS)
+def test_chaos_expiry_lane_never_drops(kind, seed):
+    """Kills re-place dead blocks through the replay lane and queued expiry
+    frees wait for the re-bound slot — the never-droppable lane must end
+    the session with zero dropped frees and an empty backlog."""
+    _, plan, report = _chaos_run(kind, seed)
+    assert report["dropped_frees"] == 0
+    assert report["expiry_frees_dispatched"] > 0
+
+
+@pytest.mark.parametrize("kind,seed", CELLS)
+def test_chaos_killed_core_goes_dark(kind, seed):
+    """After its kill round a dead core receives no further dispatch."""
+    eng, plan, report = _chaos_run(kind, seed)
+    for ev in report["faults"]:
+        if ev["kind"] != KILL:
+            continue
+        after = plan.op[ev["round"]:, ev["rank"], ev["core"], :]
+        assert (after == OP_NOOP).all()
+
+
+def test_chaos_migrations_occur_somewhere():
+    """The sweep must actually exercise migration — a chaos matrix whose
+    pressure never diverges is vacuous."""
+    assert any(_chaos_run(kind, seed)[2]["migrations"]
+               for kind, seed in CELLS)
+
+
+@pytest.mark.parametrize("kind,seed", CELLS)
+def test_chaos_migration_lane_accounted(kind, seed):
+    """Every queued migration op is either dispatched or still pending at
+    session end; dispatched ledger entries are internal (non-external)."""
+    eng, plan, report = _chaos_run(kind, seed)
+    n_mig_ops = sum(2 * ev["blocks"] for ev in report["migrations"])
+    n_kill_ops = sum(ev["blocks_replayed"] for ev in report["kills"])
+    assert report["migration_ops_dispatched"] <= n_mig_ops + n_kill_ops
+    assert (report["migration_ops_dispatched"] + report["backlog_end"]
+            >= n_kill_ops)
+
+
+def test_chaos_same_seed_same_faultplan_is_deterministic():
+    """Same traffic seed + same FaultPlan ⇒ identical report and tapes."""
+    kind, seed = KINDS[0], 0
+    _, plan_a, rep_a = _chaos_run(kind, seed)
+    eng_b = _chaos_engine(kind, seed)
+    plan_b, rep_b = eng_b.serve()
+    np.testing.assert_array_equal(plan_a.op, plan_b.op)
+    np.testing.assert_array_equal(plan_a.size, plan_b.size)
+    np.testing.assert_array_equal(plan_a.ptr_ref, plan_b.ptr_ref)
+    assert rep_a == rep_b
+    for rk in range(SHAPE[0]):
+        for ck in range(SHAPE[1]):
+            ta = eng_b.trace(plan_a, rk, ck)
+            tb = eng_b.trace(plan_b, rk, ck)
+            for f in ("op", "size", "ptr_ref", "ptr_raw"):
+                np.testing.assert_array_equal(getattr(ta, f),
+                                              getattr(tb, f))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_migrated_tenant_tape_replays_bitwise(kind):
+    """The migration destination core's session slice is a closed tape:
+    replaying it standalone reproduces the serve responses bitwise."""
+    eng, plan, report = next(
+        (_chaos_run(kind, s) for s in range(N_SEEDS)
+         if _chaos_run(kind, s)[2]["migrations"]), (None, None, None))
+    if eng is None:
+        pytest.skip(f"no migration triggered for {kind} in {N_SEEDS} seeds")
+    rk, ck = report["migrations"][0]["dst"]
+    tape = eng.trace(plan, rk, ck)          # raises if not closed
+    resps, _, _ = replay(tape, kind)
+    got = np.concatenate([np.asarray(seg.ptr) for seg in eng._resps],
+                         axis=0)[:, rk, ck, :]
+    np.testing.assert_array_equal(np.asarray(resps.ptr), got)
+
+
+# --------------------------------------------------------------------------
+# crash-vs-clean: snapshot / restore
+# --------------------------------------------------------------------------
+def test_snapshot_resume_matches_clean_run(tmp_path):
+    """Mid-session snapshot → restore (same mesh wiring AND onto a
+    shard_mapped mesh) finishes bitwise-equal to the uninterrupted run."""
+    kind, seed = KINDS[0], 0
+    _, plan_c, rep_c = _chaos_run(kind, seed)
+
+    a = _chaos_engine(kind, seed).start()
+    a.run_until(13)
+    path = a.snapshot(str(tmp_path))
+    assert os.path.exists(os.path.join(path, "COMMITTED"))
+    assert os.path.exists(os.path.join(path, "host.json"))
+
+    for mesh in (False, None):              # same wiring, then shard_mapped
+        b = _chaos_engine(kind, seed, mesh=mesh)
+        b.restore(str(tmp_path))
+        assert b.r == 13
+        plan_b, rep_b = b.finish()
+        np.testing.assert_array_equal(plan_c.op, plan_b.op)
+        np.testing.assert_array_equal(plan_c.ptr_ref, plan_b.ptr_ref)
+        assert rep_c == rep_b, f"mesh={mesh}"
+
+
+def test_restore_rejects_identity_mismatch(tmp_path):
+    a = _chaos_engine(KINDS[0], 0).start()
+    a.run_until(7)
+    a.snapshot(str(tmp_path))
+    wrong = ElasticFleetServe(_cfg(KINDS[0]), 2, 2,
+                              traffic=_tc(seed=999), placement="chunked")
+    with pytest.raises(ValueError, match="identity"):
+        wrong.restore(str(tmp_path))
+
+
+def test_restore_without_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        _chaos_engine(KINDS[0], 0).restore(str(tmp_path))
+
+
+# --------------------------------------------------------------------------
+# elastic == plain FleetServe when nothing elastic happens
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("placement", ["chunked", "least_loaded"])
+def test_no_faults_no_migration_equals_fleetserve(placement):
+    """The segmented driver is the same session as the one-shot scan."""
+    cfg, tc = _cfg(), _tc()
+    plan0, rep0 = FleetServe(cfg, 2, 2, traffic=tc,
+                             placement=placement).serve()
+    plan1, rep1 = ElasticFleetServe(cfg, 2, 2, traffic=tc,
+                                    placement=placement).serve()
+    np.testing.assert_array_equal(plan0.op, plan1.op)
+    np.testing.assert_array_equal(plan0.size, plan1.size)
+    np.testing.assert_array_equal(plan0.ptr_ref, plan1.ptr_ref)
+    for k in rep0:                          # rep1 adds elastic extras
+        assert rep0[k] == rep1[k], k
+
+
+def test_epoch_drain_arena_session():
+    """Epoch-mode chaos on an arena frontend: decisions at the boundaries
+    (Temp blocks die at the reset — the free drain point), conservation
+    and the no-drop guarantee intact."""
+    tc = _tc(epoch_rounds=6, rounds=24)
+    eng = ElasticFleetServe(
+        _cfg("arena"), 2, 2, traffic=tc, placement="chunked",
+        faults=FaultPlan.generate(seed=11, rounds=tc.rounds, shape=SHAPE,
+                                  kills=1, stalls=1, drops=0),
+        migration=_mig(drain="epoch"))
+    plan, report = eng.serve()
+    assert report["conservation_residual"] == 0
+    assert report["dropped_frees"] == 0
+    assert report["epoch_resets"] > 0
+    # decisions happened exactly at epoch boundaries
+    assert {p["round"] for p in report["pressure"]} <= set(
+        fleet.drain_epoch(tc, 0))
+
+
+# --------------------------------------------------------------------------
+# fault-plan semantics (cheap targeted sessions)
+# --------------------------------------------------------------------------
+def test_stall_blocks_one_round_then_recovers():
+    tc = _tc()
+    stall_r = 9
+    fp = FaultPlan((FaultEvent(stall_r, STALL, 0, 0),))
+    plan, rep = ElasticFleetServe(_cfg(), 2, 2, traffic=tc,
+                                  placement="chunked", faults=fp).serve()
+    assert (plan.op[stall_r, 0, 0, :] == OP_NOOP).all()
+    assert (plan.op[stall_r + 1:, 0, 0, :] != OP_NOOP).any()
+    assert rep["dropped_frees"] == 0 and rep["conservation_residual"] == 0
+
+
+def test_dropped_round_dispatches_nothing_fleetwide():
+    tc = _tc()
+    drop_r = 9
+    fp = FaultPlan((FaultEvent(drop_r, DROP),))
+    plan, rep = ElasticFleetServe(_cfg(), 2, 2, traffic=tc,
+                                  placement="chunked", faults=fp).serve()
+    assert (plan.op[drop_r] == OP_NOOP).all()
+    assert plan.dispatched_per_round[drop_r] == 0
+    assert rep["dropped_frees"] == 0 and rep["conservation_residual"] == 0
+
+
+def test_kill_rehomes_tenants_and_replays_blocks():
+    tc = _tc()
+    fp = FaultPlan((FaultEvent(10, KILL, 0, 0),))
+    plan, rep = ElasticFleetServe(_cfg(), 2, 2, traffic=tc,
+                                  placement="chunked", faults=fp).serve()
+    (kill,) = rep["kills"]
+    assert kill["core"] == [0, 0]
+    assert rep["killed_cores"] == [[0, 0]]
+    # nothing dispatched to the dead core from the kill round on
+    assert (plan.op[10:, 0, 0, :] == OP_NOOP).all()
+    # re-homed tenants now home elsewhere
+    for k in kill["tenants_rehomed"]:
+        assert tuple(plan.tenant_home[k]) != (0, 0)
+    assert rep["dropped_frees"] == 0 and rep["conservation_residual"] == 0
+
+
+# --------------------------------------------------------------------------
+# FaultPlan: generation, serialization, validation
+# --------------------------------------------------------------------------
+def test_faultplan_generate_deterministic_and_json_roundtrip():
+    a = FaultPlan.generate(seed=5, rounds=32, shape=SHAPE, kills=2,
+                           stalls=2, drops=1)
+    b = FaultPlan.generate(seed=5, rounds=32, shape=SHAPE, kills=2,
+                           stalls=2, drops=1)
+    assert a == b
+    assert FaultPlan.from_json(a.to_json()) == a
+    assert len(a.events) == 5
+    a.validate(SHAPE, 32)
+    assert len(a.kill_rounds()) == len({e.round for e in a.events
+                                        if e.kind == KILL})
+
+
+def test_faultplan_validate_rejects_bad_plans():
+    with pytest.raises(ValueError, match="round"):
+        FaultPlan((FaultEvent(40, DROP),)).validate(SHAPE, 32)
+    with pytest.raises(ValueError, match="core"):
+        FaultPlan((FaultEvent(3, KILL, 7, 0),)).validate(SHAPE, 32)
+    with pytest.raises(ValueError, match="once"):
+        FaultPlan((FaultEvent(3, KILL, 0, 0),
+                   FaultEvent(5, KILL, 0, 0))).validate(SHAPE, 32)
+    with pytest.raises(AssertionError):
+        FaultEvent(3, "melt")
+
+
+# --------------------------------------------------------------------------
+# divergence detection (pure host-side units, pinned thresholds)
+# --------------------------------------------------------------------------
+def test_hwm_divergence_triggers_past_ratio():
+    div = telemetry.hwm_divergence([10_000, 2_000], ratio=2.0, min_bytes=1)
+    assert div["trigger"] and div["hottest_rank"] == 0
+    assert div["coldest_rank"] == 1 and div["ratio"] == 5.0
+
+
+def test_hwm_divergence_quiet_inside_ratio():
+    # 1.5x apart under a 2x threshold: must NOT trigger
+    assert not telemetry.hwm_divergence([3_000, 2_000], ratio=2.0)["trigger"]
+    # exactly at the threshold is not past it
+    assert not telemetry.hwm_divergence([4_000, 2_000], ratio=2.0)["trigger"]
+    assert telemetry.hwm_divergence([4_001, 2_000], ratio=2.0)["trigger"]
+
+
+def test_hwm_divergence_min_bytes_floor():
+    """An idle fleet (cold rank at 0) must not trigger on noise below the
+    byte floor, and must not divide by zero."""
+    quiet = telemetry.hwm_divergence([100, 0], ratio=2.0, min_bytes=4096)
+    assert not quiet["trigger"]
+    hot = telemetry.hwm_divergence([10_000, 0], ratio=2.0, min_bytes=4096)
+    assert hot["trigger"] and hot["ratio"] == 10_000 / 4096
+    with pytest.raises(ValueError):
+        telemetry.hwm_divergence([])
+
+
+def test_fleet_pressure_reads_fleet_telemetry():
+    from repro.core import heap as heap_api
+    state = heap_api.sharded_init(_cfg(), 2, 2)
+    pres = telemetry.fleet_pressure(state)
+    assert pres["live"].shape == (2, 2) and pres["rank_hwm"].shape == (2,)
+    with pytest.raises(ValueError):
+        telemetry.fleet_pressure(
+            __import__("jax").tree.map(lambda x: x[0], state))
+
+
+# --------------------------------------------------------------------------
+# policy registries
+# --------------------------------------------------------------------------
+def test_migrate_hottest_tenant_moves_biggest_off_hot_rank():
+    homes = {0: (0, 0), 1: (0, 1), 2: (1, 0)}
+    tb = {0: 100, 1: 900, 2: 500}
+    loads = np.array([[600.0, 400.0], [500.0, 10.0]])
+    div = {"hottest_rank": 0, "coldest_rank": 1}
+    moves = fleet.MIGRATIONS["hottest_tenant"](div, homes, tb, loads,
+                                               SHAPE, max_moves=2)
+    assert moves[0] == (1, (1, 1))          # biggest tenant, emptiest core
+    assert moves[1][0] == 0                 # next-biggest on the hot rank
+    assert all(dst[0] != 0 for _, dst in moves)
+
+
+def test_migrate_hottest_tenant_avoids_dead_cores():
+    homes = {0: (0, 0)}
+    loads = np.array([[900.0, 900.0], [0.0, 50.0]])
+    div = {"hottest_rank": 0, "coldest_rank": 1}
+    moves = fleet.MIGRATIONS["hottest_tenant"](
+        div, homes, {0: 10}, loads, SHAPE, dead={(1, 0)})
+    assert moves == [(0, (1, 1))]
+
+
+def test_migrate_none_is_inert():
+    assert fleet.MIGRATIONS["none"]({"hottest_rank": 0}, {0: (0, 0)},
+                                    {0: 1}, np.zeros((2, 2)), SHAPE) == []
+
+
+def test_drain_policies():
+    tc = _tc(epoch_rounds=6, rounds=24)
+    assert fleet.DRAINS["epoch"](tc, 0) == [6, 12, 18]
+    assert fleet.DRAINS["epoch"](_tc(rounds=24), 0) == []
+    assert fleet.DRAINS["interval"](_tc(rounds=20), 8) == [8, 16]
+    assert fleet.DRAINS["none"](tc, 8) == []
+
+
+def test_migration_config_validates_policy_names():
+    with pytest.raises(ValueError, match="migration policy"):
+        MigrationConfig(policy="teleport")
+    with pytest.raises(ValueError, match="drain"):
+        MigrationConfig(drain="sometimes")
